@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: timing, synthetic datasets (paper Table 4 at
+CPU scale), CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+U32 = 2 ** 32
+
+
+def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1, **kw):
+    """Median wall time (s) with block_until_ready on pytree outputs."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def edge_stream(n_vertices: int, n_edges: int, dist: str = "powerlaw",
+                seed: int = 0, id_bits: int = 32):
+    """(src, dst, vertex_ids): non-contiguous IDs, paper-style topology."""
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(2 ** id_bits, size=n_vertices, replace=False).astype(
+        np.uint64)
+    if dist == "powerlaw":
+        # zipf-ish endpoint selection (g500-like skew)
+        p = 1.0 / np.arange(1, n_vertices + 1) ** 0.8
+        p /= p.sum()
+        src = ids[rng.choice(n_vertices, n_edges, p=p)]
+        dst = ids[rng.choice(n_vertices, n_edges, p=p)]
+    else:
+        src = ids[rng.integers(0, n_vertices, n_edges)]
+        dst = ids[rng.integers(0, n_vertices, n_edges)]
+    return src, dst, ids
+
+
+# scaled-down Table 4 (container CPU scale; --scale grows them on hardware)
+DATASETS: Dict[str, Tuple[int, int, str]] = {
+    "lj": (4000, 32000, "powerlaw"),       # livejournal-like
+    "dota": (600, 48000, "uniform"),       # dense (avg deg ~80)
+    "orkut": (3000, 110000, "powerlaw"),
+    "g24": (9000, 96000, "powerlaw"),
+    "u24": (9000, 96000, "uniform"),
+    "twitter": (16000, 200000, "powerlaw"),
+}
+
+
+def dataset(name: str, scale: float = 1.0, seed: int = 0):
+    n, m, dist = DATASETS[name]
+    return edge_stream(int(n * scale), int(m * scale), dist, seed)
+
+
+# fixed static capacities shared by every graph benchmark — one jit cache
+# across datasets/policies (different capacities would recompile everything)
+GRAPH_CAPS = dict(n_max=40960, pool_blocks=131072, block_size=16,
+                  dmax=4096, k_max=256, batch=4096)
+
+
+def make_graph(policy: str = "snaplog", expected_n: int = 8192, **over):
+    from repro.core.radixgraph import RadixGraph
+    kw = dict(GRAPH_CAPS)
+    kw.update(over)
+    return RadixGraph(key_bits=32, expected_n=expected_n, policy=policy,
+                      undirected=True, **kw)
+
+
+def emit(rows):
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

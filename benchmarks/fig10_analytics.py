@@ -1,0 +1,48 @@
+"""Paper Fig. 10: k-hop neighbor query throughput + GAPBS analytics latency
+(BFS, SSSP, PR, WCC, TC, BC) on the RadixGraph snapshot."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import analytics as A
+from repro.core.radixgraph import RadixGraph
+
+from .common import dataset, emit, timeit
+
+
+def run(scale: float = 1.0, datasets=("lj", "dota", "u24")):
+    rows = [("fig10", "dataset", "task", "latency_ms", "throughput_qps")]
+    for ds in datasets:
+        src, dst, ids = dataset(ds, scale)
+        n = len(ids)
+        from .common import make_graph
+        g = make_graph("snaplog")
+        g.add_edges(src, dst)
+        # tight CSR pad: analytics cost scales with m_cap, not live edges
+        m_cap = 1 << (2 * len(src) * 2 + 1024).bit_length()
+        t_snap, snap = timeit(g.snapshot, m_cap=m_cap, iters=2)
+        rows.append(("fig10", ds, "snapshot_build", round(t_snap * 1e3, 2), ""))
+        off = g.lookup(ids)
+        Q = min(512, n)
+        qoff = jnp.asarray(off[:Q], jnp.int32)
+        for k in (1, 2):
+            t, _ = timeit(A.khop, snap, qoff, k=k, iters=2)
+            rows.append(("fig10", ds, f"{k}-hop", round(t * 1e3, 2),
+                         round(Q / t, 1)))
+        s0 = jnp.int32(int(off[0]))
+        for name, fn in (
+            ("BFS", lambda: A.bfs(snap, s0)),
+            ("SSSP", lambda: A.sssp(snap, s0)),
+            ("PR", lambda: A.pagerank(snap, iters=20)),
+            ("WCC", lambda: A.wcc(snap)),
+            ("TC", lambda: A.triangle_count(snap)),
+            ("BC", lambda: A.bc(snap, qoff[:16])),
+        ):
+            t, _ = timeit(fn, iters=2)
+            rows.append(("fig10", ds, name, round(t * 1e3, 2), ""))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

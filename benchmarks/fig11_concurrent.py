@@ -1,0 +1,63 @@
+"""Paper Fig. 11: concurrent reads & writes.
+
+Thread-scaling becomes shard-scaling on the SPMD substrate: the distributed
+graph engine partitions the vertex space over N placeholder devices; writer
+throughput = batched edge ops routed via all_to_all, reader throughput =
+degree/1-hop queries answered by owners, interleaved 1:1 (the paper's mixed
+workload). Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 for
+the multi-shard points (benchmarks.run sets 8 by default via a subprocess).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.core import edgepool as ep
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort
+from repro.dist.graph_engine import (make_apply_edges, make_khop_counts,
+                                     make_sharded_state)
+
+from .common import emit, timeit
+
+
+def run(scale: float = 1.0):
+    rows = [("fig11", "shards", "write_Mops", "read_Mqps")]
+    n_dev = len(jax.devices())
+    for shards in sorted({1, 2, 4, 8} & set(range(1, n_dev + 1))):
+        mesh = jax.make_mesh((shards,), ("data",),
+                             devices=jax.devices()[:shards],
+                             axis_types=(AxisType.Auto,))
+        cfg = optimize_sort(4096, 32, 5)
+        sspec = SortSpec.from_config(cfg, 8192)
+        pspec = ep.PoolSpec(n_blocks=int(16384 * scale), block_size=16,
+                            k_max=128, dmax=2048)
+        state = make_sharded_state(sspec, pspec, shards, 8192)
+        apply_fn = jax.jit(make_apply_edges(sspec, pspec, mesh, "data"))
+        khop = jax.jit(make_khop_counts(sspec, pspec, mesh, "data"))
+
+        rng = np.random.default_rng(0)
+        ids = rng.choice(2 ** 32, 2048, replace=False).astype(np.uint64)
+        B = 4096 * shards
+        sk = pack_keys(rng.choice(ids, B), 32)
+        dk = pack_keys(rng.choice(ids, B), 32)
+        w = jnp.asarray(rng.uniform(0.5, 2, B).astype(np.float32))
+        mask = jnp.ones(B, bool)
+        qk = pack_keys(ids[:1024], 32)
+
+        def mixed(state):
+            state, _ = apply_fn(state, sk, dk, w, mask)
+            cnt = khop(state, qk)
+            return state, cnt
+
+        t, (state, _) = timeit(mixed, state, iters=3)
+        rows.append(("fig11", shards, round(B / t / 1e6, 3),
+                     round(1024 / t / 1e6, 3)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Fig. 12: SORT case study — optimal fanouts vs n, updated-vs-trailing
+config memory, linear space growth, and transformation (rebuild) cost."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sort as sort_mod
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import expected_space, optimize_sort
+
+from .common import emit, timeit
+
+import jax.numpy as jnp
+
+
+def _insert(spec, ids):
+    st = sort_mod.make_sort(spec)
+    return sort_mod.insert_mappings(
+        spec, st, pack_keys(ids, 32),
+        jnp.arange(len(ids), dtype=jnp.int32), jnp.ones(len(ids), bool))
+
+
+def run(scale: float = 1.0):
+    rows = [("fig12a", "n", "optimal_fanouts", "expected_slots")]
+    ns = [10_000, 50_000, 100_000, 300_000, 1_000_000, 3_000_000, 10_000_000]
+    configs = {}
+    for n in ns:
+        c = optimize_sort(n, 32, 5)
+        configs[n] = c
+        rows.append(("fig12a", n, "|".join(map(str, c.fanout_bits)),
+                     int(c.expected_space)))
+    # (b) updated vs trailing config memory (objective value comparison)
+    for i in range(1, len(ns)):
+        n = ns[i]
+        upd = configs[n]
+        trail = configs[ns[i - 1]]
+        rows.append(("fig12b", n,
+                     f"updated={int(upd.expected_space)}",
+                     f"trailing={int(expected_space(trail.fanout_bits, 32, n))}"))
+    # (c) measured materialized slots ~ linear in n; (d) transformation cost
+    rng = np.random.default_rng(0)
+    for n in (int(20_000 * scale), int(60_000 * scale), int(120_000 * scale)):
+        ids = rng.choice(2 ** 32, n, replace=False).astype(np.uint64)
+        cfg = optimize_sort(n, 32, 5)
+        spec = SortSpec.from_config(cfg, n + 8)
+        t_build, st = timeit(_insert, spec, ids, iters=1, warmup=0)
+        slots = int(sort_mod.materialized_slots(spec, st))
+        rows.append(("fig12c", n, slots, round(slots / n, 2)))
+        # transformation = rebuild under the next config (lazy adaptation
+        # upper bound: full reinsert)
+        cfg2 = optimize_sort(2 * n, 32, 5)
+        spec2 = SortSpec.from_config(cfg2, 2 * n + 8)
+        t_tr, _ = timeit(_insert, spec2, ids, iters=1, warmup=0)
+        rows.append(("fig12d", n, f"transform_ms={round(t_tr * 1e3, 1)}",
+                     f"build_ms={round(t_build * 1e3, 1)}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

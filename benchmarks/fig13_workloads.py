@@ -1,0 +1,51 @@
+"""Paper Fig. 13: SORT vs vEB memory under uniform / skewed / heavy-tailed
+ID workloads."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sort as sort_mod
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort, veb_config
+
+from .common import emit
+
+import jax.numpy as jnp
+
+
+def _workload(kind: str, n: int, rng):
+    if kind == "uniform":
+        return rng.choice(2 ** 32, n, replace=False).astype(np.uint64)
+    if kind == "skewed":
+        return rng.choice(int((2 ** 32 - 1) / 1.5), n,
+                          replace=False).astype(np.uint64)
+    # heavy-tailed: reciprocal distribution p(i) ~ 1/i
+    u = rng.random(n * 3)
+    ids = np.unique((np.exp(u * np.log(2 ** 32)) - 1).astype(np.uint64))
+    rng.shuffle(ids)
+    return ids[:n]
+
+
+def run(scale: float = 1.0):
+    rows = [("fig13", "workload", "structure", "n", "materialized_slots",
+             "memory_kb")]
+    rng = np.random.default_rng(0)
+    n = int(100_000 * scale)
+    for kind in ("uniform", "skewed", "heavy-tailed"):
+        ids = _workload(kind, n, rng)
+        nn = len(ids)
+        for name, cfg in (("sort", optimize_sort(nn, 32, 5)),
+                          ("veb", veb_config(nn, 32))):
+            spec = SortSpec.from_config(cfg, nn + 8)
+            st = sort_mod.make_sort(spec)
+            st = sort_mod.insert_mappings(
+                spec, st, pack_keys(ids, 32),
+                jnp.arange(nn, dtype=jnp.int32), jnp.ones(nn, bool))
+            slots = int(sort_mod.materialized_slots(spec, st))
+            rows.append(("fig13", kind, name, nn, slots, slots * 4 // 1024))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Paper Fig. 8: edge insert/delete throughput, vertex insert/query
+throughput, and memory across datasets — RadixGraph (snaplog) vs the
+log-structured ('grow', LiveGraph-paradigm) and sorted+buffer ('sorted',
+Spruce-paradigm) edge baselines, plus ART/hash vertex-index baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import HashIndex, JaxART
+from repro.core.radixgraph import RadixGraph
+
+from .common import DATASETS, dataset, emit, timeit
+
+
+def _mk(policy, n, m):
+    from .common import make_graph
+    return make_graph(policy)
+
+
+def _warm():
+    """Compile-warm the shared jit cache so timings measure execution."""
+    from .common import make_graph
+    import numpy as np
+    rng = np.random.default_rng(9)
+    for policy in ("snaplog", "grow", "sorted"):
+        g = make_graph(policy)
+        s = rng.choice(2 ** 32, 4096).astype(np.uint64)
+        g.add_edges(s, s[::-1])
+        g.delete_edges(s[:16], s[::-1][:16])
+        g.lookup(s[:16])
+        g.add_vertices(s[:16])
+
+
+def run(scale: float = 1.0, datasets=("lj", "dota", "u24")):
+    rows = [("fig8", "dataset", "system", "edge_ins_Mops", "edge_del_Mops",
+             "vtx_ins_Mops", "vtx_qry_Mops", "memory_mb")]
+    _warm()
+    for ds in datasets:
+        src, dst, ids = dataset(ds, scale)
+        n, m = len(ids), len(src)
+        half = m // 2
+        for policy in ("snaplog", "grow", "sorted"):
+            g = _mk(policy, n, m)
+            t_ins, _ = timeit(lambda: g.add_edges(src, dst), iters=1,
+                              warmup=0)
+            t_del, _ = timeit(lambda: g.delete_edges(src[:half], dst[:half]),
+                              iters=1, warmup=0)
+            mem = g.memory_bytes() / 2 ** 20
+            name = {"snaplog": "RadixGraph", "grow": "log-store",
+                    "sorted": "sorted+buffer"}[policy]
+            rows.append(("fig8", ds, name, round(2 * m / t_ins / 1e6, 3),
+                         round(2 * half / t_del / 1e6, 3), "", "",
+                         round(mem, 2)))
+        # vertex index microbench (insert + query) on this ID set
+        qs = np.concatenate([ids, ids[: max(1, n // 2)]])
+        g = _mk("snaplog", n, m)
+        from .common import make_graph
+        t_vi, _ = timeit(lambda: make_graph("snaplog").add_vertices(ids),
+                         iters=1, warmup=0)
+        t_vq, _ = timeit(lambda: g.lookup(qs), iters=2, warmup=1)
+        rows.append(("fig8", ds, "RadixGraph-vertex", "", "",
+                     round(n / t_vi / 1e6, 3), round(len(qs) / t_vq / 1e6, 3),
+                     ""))
+        art = JaxART(n_max=8192)
+        t_ai, _ = timeit(lambda: art.insert(ids, np.arange(n, dtype=np.int32)),
+                         iters=1, warmup=0)
+        t_aq, _ = timeit(lambda: art.lookup(qs), iters=2, warmup=1)
+        rows.append(("fig8", ds, "ART-vertex", "", "",
+                     round(n / t_ai / 1e6, 4), round(len(qs) / t_aq / 1e6, 3),
+                     round(art.memory_bytes() / 2 ** 20, 3)))
+        h = HashIndex(n_max=8192)
+        t_hi, _ = timeit(lambda: h.insert(ids, np.arange(n, dtype=np.int32)),
+                         iters=1, warmup=0)
+        t_hq, _ = timeit(lambda: h.lookup(qs), iters=2, warmup=1)
+        rows.append(("fig8", ds, "hash-vertex", "", "",
+                     round(n / t_hi / 1e6, 3), round(len(qs) / t_hq / 1e6, 3),
+                     round(h.memory_bytes() / 2 ** 20, 3)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Fig. 9: mixed edge updates (insert/update/delete stream) time
+footprint at 20%..100% checkpoints + memory during large-scale deletions."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.radixgraph import RadixGraph
+
+from .common import dataset, emit
+
+
+def run(scale: float = 1.0):
+    rows = [("fig9", "dataset", "system", "pct", "elapsed_s", "memory_mb")]
+    for ds in ("g24", "u24"):
+        src, dst, ids = dataset(ds, scale)
+        m = len(src)
+        rng = np.random.default_rng(1)
+        w = rng.uniform(0.5, 2.0, m).astype(np.float32)
+        kind = rng.random(m)
+        w[kind < 0.25] = 0.0                      # 25% deletions
+        for policy in ("snaplog", "grow", "sorted"):
+            from .common import make_graph
+            g = make_graph(policy)
+            name = {"snaplog": "RadixGraph", "grow": "log-store",
+                    "sorted": "sorted+buffer"}[policy]
+            t0 = time.perf_counter()
+            for pct in (20, 40, 60, 80, 100):
+                lo, hi = m * (pct - 20) // 100, m * pct // 100
+                g.apply_ops(src[lo:hi], dst[lo:hi], w[lo:hi])
+                rows.append(("fig9", ds, name, pct,
+                             round(time.perf_counter() - t0, 3),
+                             round(g.memory_bytes() / 2 ** 20, 2)))
+        # deletion memory footprint (Fig. 9c/d): delete everything in waves
+        from .common import make_graph
+        g = make_graph("snaplog")
+        g.add_edges(src, dst)
+        for pct in (25, 50, 75, 100):
+            lo, hi = m * (pct - 25) // 100, m * pct // 100
+            g.delete_edges(src[lo:hi], dst[lo:hi])
+            rows.append(("fig9-del", ds, "RadixGraph", pct, "",
+                         round(g.memory_bytes() / 2 ** 20, 2)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

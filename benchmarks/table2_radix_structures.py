@@ -1,0 +1,45 @@
+"""Paper Table 2: uniform-tree vs vEB-tree vs SORT — memory & insertion time
+for n random IDs in [0, 2^32). Same layer budget l = lglg(u) = 5."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sort as sort_mod
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort, uniform_config, veb_config
+
+from .common import timeit, emit
+
+
+def _insert_all(spec, ids):
+    st = sort_mod.make_sort(spec)
+    keys = pack_keys(ids, 32)
+    offs = np.arange(len(ids), dtype=np.int32)
+    import jax.numpy as jnp
+    st = sort_mod.insert_mappings(spec, st, keys, jnp.asarray(offs),
+                                  jnp.ones(len(ids), bool))
+    return st
+
+
+def run(scale: float = 1.0):
+    rows = [("table2", "structure", "n", "materialized_slots", "memory_kb",
+             "insert_ms")]
+    rng = np.random.default_rng(0)
+    for n in (int(1e3 * scale), int(1e4 * scale), int(3e4 * scale)):
+        ids = rng.choice(2 ** 32, n, replace=False).astype(np.uint64)
+        for name, cfg in (
+            ("uniform", uniform_config(n, 32, 5)),
+            ("veb", veb_config(n, 32)),
+            ("sort", optimize_sort(n, 32, 5)),
+        ):
+            spec = SortSpec.from_config(cfg, n)
+            dt, st = timeit(_insert_all, spec, ids, iters=3)
+            slots = int(sort_mod.materialized_slots(spec, st))
+            rows.append(("table2", name, n, slots, slots * 4 // 1024,
+                         round(dt * 1e3, 2)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

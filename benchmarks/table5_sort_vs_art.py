@@ -1,0 +1,52 @@
+"""Paper Table 5: SORT vs ART — insert/query throughput and memory across
+(n, u) grid."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import JaxART
+from repro.core import sort as sort_mod
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort
+
+from .common import emit, timeit
+
+import jax.numpy as jnp
+
+
+def run(scale: float = 1.0):
+    rows = [("table5", "n", "u_bits", "structure", "insert_ops_s",
+             "query_ops_s", "memory_kb")]
+    rng = np.random.default_rng(0)
+    for n in (int(1e4 * scale), int(5e4 * scale)):
+        for xb in (24, 32):
+            ids = rng.choice(2 ** xb, n, replace=False).astype(np.uint64)
+            qs = np.concatenate([ids, rng.choice(2 ** xb, n).astype(np.uint64)])
+            offs = jnp.arange(n, dtype=jnp.int32)
+            keys = pack_keys(ids, xb)
+            qkeys = pack_keys(qs, xb)
+            cfg = optimize_sort(n, xb, 5)
+            spec = SortSpec.from_config(cfg, n + 8)
+
+            def s_ins():
+                st = sort_mod.make_sort(spec)
+                return sort_mod.insert_mappings(spec, st, keys, offs,
+                                                jnp.ones(n, bool))
+            t_i, st = timeit(s_ins, iters=2)
+            t_q, _ = timeit(lambda: sort_mod.lookup(spec, st, qkeys), iters=3)
+            slots = int(sort_mod.materialized_slots(spec, st))
+            rows.append(("table5", n, xb, "sort", int(n / t_i),
+                         int(len(qs) / t_q), slots * 4 // 1024))
+
+            art = JaxART(n_max=n + 8, key_bits=xb)
+            t_i, _ = timeit(lambda: art.insert(ids, np.arange(n, dtype=np.int32)),
+                            iters=1, warmup=1)
+            t_q, _ = timeit(lambda: art.lookup(qs), iters=3)
+            rows.append(("table5", n, xb, "art", int(n / t_i),
+                         int(len(qs) / t_q), art.memory_bytes() // 1024))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""Paper Table 6 ablations:
+  (a) SORT vs ART as RadixGraph's vertex index — the ID-translation
+      component is benchmarked head-to-head on the graph's real ID stream;
+  (b) edge chain on/off — multi-hop analytics pay a per-hop ID->offset
+      SORT round-trip when the chain is disabled (the prior-systems layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import analytics as A
+from repro.baselines import JaxART
+from repro.core import sort as sort_mod
+from repro.core.radixgraph import RadixGraph
+
+from .common import dataset, emit, timeit
+
+
+def _bfs_without_chain(g, snap, src_off, max_iters=32):
+    """Level-synchronous BFS where every hop re-translates IDs through the
+    vertex index (edge blocks store IDs, not offsets)."""
+    ids = np.asarray(g.state.vt.ids)
+    n = snap.indptr.shape[0] - 1
+    depth = np.full(n, -1, np.int32)
+    depth[src_off] = 0
+    frontier = [src_off]
+    indptr = np.asarray(snap.indptr)
+    dst = np.asarray(snap.dst)
+    it = 0
+    while frontier and it < max_iters:
+        it += 1
+        nxt = set()
+        offs = np.asarray(frontier)
+        for o in offs:
+            nbr_off = dst[indptr[o]:indptr[o + 1]]
+            # chain OFF: pretend blocks held IDs -> translate via SORT
+            hi = ids[nbr_off, 0].astype(np.uint64) << np.uint64(32)
+            nbr_ids = hi | ids[nbr_off, 1].astype(np.uint64)
+            back = g.lookup(nbr_ids)          # the extra per-hop lookups
+            for b in back:
+                if b >= 0 and depth[b] < 0:
+                    depth[b] = it
+                    nxt.add(int(b))
+        frontier = list(nxt)
+    return depth
+
+
+def run(scale: float = 1.0, datasets=("lj", "dota")):
+    rows = [("table6", "dataset", "ablation", "metric", "value")]
+    for ds in datasets:
+        src, dst, ids = dataset(ds, scale)
+        n = len(ids)
+        from .common import make_graph
+        g = make_graph("snaplog")
+        g.add_edges(src, dst)
+        snap = g.snapshot(m_cap=1 << (2 * len(src) * 2 + 1024).bit_length())
+        off = g.lookup(ids)
+
+        # (a) vertex-index swap: translation throughput on the real stream
+        stream = np.concatenate([src, dst])
+        t_sort, _ = timeit(lambda: g.lookup(stream), iters=2)
+        art = JaxART(n_max=8192)
+        art.insert(ids, np.asarray(off, np.int32))
+        t_art, _ = timeit(lambda: art.lookup(stream), iters=2)
+        rows.append(("table6", ds, "ART-vs-SORT", "lookup_slowdown_x",
+                     round(t_art / t_sort, 2)))
+
+        # (b) edge chain ablation
+        s0 = jnp.int32(int(off[0]))
+        t_chain, _ = timeit(lambda: A.bfs(snap, s0), iters=2)
+        t_nochain, _ = timeit(_bfs_without_chain, g, snap, int(off[0]),
+                              iters=1, warmup=0)
+        rows.append(("table6", ds, "edge-chain", "bfs_slowdown_wo_chain_x",
+                     round(t_nochain / t_chain, 2)))
+        Q = min(256, n)
+        qoff = jnp.asarray(off[:Q], jnp.int32)
+        t2, _ = timeit(A.khop, snap, qoff, k=2, iters=2)
+
+        def two_hop_nochain():
+            # hop 1 from snapshot, then translate + look up before hop 2
+            one = A.khop(snap, qoff, k=1)
+            ids_np = np.asarray(g.state.vt.ids)
+            hi = ids_np[np.asarray(qoff), 0].astype(np.uint64) << np.uint64(32)
+            back = g.lookup(hi | ids_np[np.asarray(qoff), 1].astype(np.uint64))
+            return A.khop(snap, jnp.asarray(back, jnp.int32), k=2)
+
+        t2n, _ = timeit(two_hop_nochain, iters=2)
+        rows.append(("table6", ds, "edge-chain", "2hop_slowdown_wo_chain_x",
+                     round(t2n / t2, 2)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Table 7: insert/delete throughput across batch sizes + memory."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.radixgraph import RadixGraph
+
+from .common import dataset, emit, timeit
+
+
+def run(scale: float = 1.0, datasets=("lj", "orkut")):
+    rows = [("table7", "dataset", "batch", "insert_ops_s", "delete_ops_s",
+             "memory_mb")]
+    for ds in datasets[:1 if scale < 0.5 else 2]:
+        src, dst, ids = dataset(ds, scale)
+        m = len(src)
+        for batch in (64, 512, 4096):
+            from .common import make_graph
+            g = make_graph("snaplog", batch=batch)
+            t_i, _ = timeit(lambda: g.add_edges(src, dst), iters=1, warmup=0)
+            t_d, _ = timeit(lambda: g.delete_edges(src, dst), iters=1,
+                            warmup=0)
+            rows.append(("table7", ds, batch, int(2 * m / t_i),
+                         int(2 * m / t_d),
+                         round(g.memory_bytes() / 2 ** 20, 2)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

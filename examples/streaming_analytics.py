@@ -1,0 +1,45 @@
+"""Streaming ingestion + concurrent analytics on MVCC snapshots.
+
+The writer ingests update waves; after each wave an analytics "reader" runs
+PageRank/WCC on a consistent retained version while new writes proceed —
+the paper's Fig. 7 / §4.5 workload in functional form.
+
+  PYTHONPATH=src python examples/streaming_analytics.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import analytics as A
+from repro.core.radixgraph import RadixGraph
+
+g = RadixGraph(n_max=8192, key_bits=32, expected_n=2000, batch=2048,
+               pool_blocks=32768, block_size=16, undirected=True)
+rng = np.random.default_rng(1)
+ids = rng.choice(2**32, 2000, replace=False).astype(np.uint64)
+
+versions = []
+for wave in range(6):
+    src, dst = rng.choice(ids, 4000), rng.choice(ids, 4000)
+    w = rng.uniform(0.5, 2.0, 4000).astype(np.float32)
+    w[rng.random(4000) < 0.2] = 0.0   # 20% deletions
+    t0 = time.perf_counter()
+    g.apply_ops(src, dst, w)
+    ts = g.checkpoint_version()
+    dt = time.perf_counter() - t0
+    print(f"wave {wave}: ingested 8000 directed ops in {dt*1e3:.0f} ms "
+          f"-> version {ts}, {g.num_edges} live edges")
+
+# analytics over the retained versions (old states stay readable — MVCC)
+for label, state in g._versions[::2]:
+    snap_g = RadixGraph.__new__(RadixGraph)
+    snap_g.__dict__.update(g.__dict__)
+    snap_g.state = state
+    snap = snap_g.snapshot()
+    pr = A.pagerank(snap, iters=10)
+    wcc = A.wcc(snap)
+    ncomp = len(set(np.asarray(wcc)[np.asarray(wcc) >= 0].tolist()))
+    print(f"version {label}: m={int(snap.m)}, pr_sum="
+          f"{float(jnp.sum(pr)):.3f}, components={ncomp}")
+print("OK")

@@ -1,0 +1,59 @@
+"""End-to-end driver: train an LM for a few hundred steps with checkpointing,
+optionally streaming its tokens out of a live RadixGraph (random walks).
+
+Default is a ~100M-param qwen2.5-family config scaled for CPU wall clocks;
+pass --full-100m on real hardware for the genuine 100M run.
+
+  PYTHONPATH=src python examples/train_lm.py            # quick CPU run
+  PYTHONPATH=src python examples/train_lm.py --graph    # graph-fed corpus
+"""
+import argparse
+import sys
+
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--graph", action="store_true",
+                    help="draw training tokens from a live RadixGraph")
+    ap.add_argument("--full-100m", action="store_true",
+                    help="train the real ~100M config (use on TPU/large CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt = args.ckpt_dir or ("/tmp/repro_lm_ckpt_graph" if args.graph
+                             else "/tmp/repro_lm_ckpt")
+
+    argv = ["--arch", "qwen2.5-3b", "--steps", str(args.steps),
+            "--ckpt-dir", ckpt, "--ckpt-every", "100",
+            "--lr", "1e-3", "--data", "graph" if args.graph else "synthetic"]
+    if args.full_100m:
+        # ~100M params: 12 x 768 with the qwen2.5 block (run on real HW)
+        import repro.configs.qwen2_5_3b as q
+        q.SMOKE = q.CONFIG.scaled(layers=12, d_model=768, n_heads=12,
+                                  kv_heads=2, d_ff=2048, vocab=32000,
+                                  param_dtype="float32",
+                                  compute_dtype="float32")
+        argv += ["--smoke", "--batch", "8", "--seq", "512"]
+    else:
+        argv += ["--smoke", "--batch", "16", "--seq", "64"]
+    losses = T.main(argv)
+    if not losses:
+        print("OK (already trained to --steps; delete the ckpt dir to rerun)")
+        return
+    import numpy as np
+    head = float(np.mean(losses[:10]))
+    tail = float(np.mean(losses[-10:]))
+    if args.graph:
+        # random-walk corpora over random graphs are near-iid: require
+        # non-divergence, not a visible drop, at short step counts
+        assert tail <= head + 0.05, (head, tail)
+    else:
+        assert tail < head, (head, tail)
+    print(f"OK: loss {head:.3f} -> {tail:.3f} (mean-of-10) over "
+          f"{len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .algorithms import (bfs, sssp, pagerank, wcc, triangle_count, bc, khop,
+                         edge_sources)
+
+__all__ = ["bfs", "sssp", "pagerank", "wcc", "triangle_count", "bc", "khop",
+           "edge_sources"]

@@ -1,0 +1,15 @@
+"""Baselines the paper compares against, on the same JAX substrate.
+
+Vertex indices: JaxART (adaptive radix tree, 8-bit layers, sparse/dense
+nodes), HashIndex (open-addressing — the multi-level-vector family's ID
+translation), uniform-tree and vEB-tree SORT configurations (via
+``sort_optimizer.uniform_config`` / ``veb_config`` + ``SortSpec``).
+
+Edge structures: selected by ``RadixGraph(policy=...)`` — 'grow'
+(log-structured, LiveGraph/GTX paradigm) and 'sorted' (sorted snapshot +
+small buffer, Spruce paradigm) against the paper's 'snaplog'.
+"""
+from .art import JaxART
+from .hash_index import HashIndex
+
+__all__ = ["JaxART", "HashIndex"]

@@ -1,0 +1,532 @@
+"""Snapshot-log edge storage (paper §3.3) — functional, pool-based.
+
+TPU adaptation: per-vertex ``malloc``'d edge arrays become contiguous block
+**extents** inside one global pool, so
+
+* append = vectorized scatter at ``start_block*BS + size + rank`` (the batched
+  analogue of the paper's lock-free ``fetch_add`` slot claim),
+* the snapshot/log split is positional: entries [0, deg) are the snapshot,
+  [deg, size) the log; capacity keeps the paper's ``cap = 2·snapshot``
+  discipline so compaction stays amortized O(1) per op (Theorem 2),
+* compaction (Alg. 2) runs batched over up to K_MAX overflowing vertices with
+  the duplicate-checker kernel; larger events fall through to a global
+  **defragmentation** — a fully-vectorized rebuild (sort + cumsum re-layout)
+  that doubles as the allocator's garbage collector. Bump allocation between
+  defrags replaces free lists (TPUs want bulk re-layout, not pointer reuse).
+* every entry carries a timestamp; reads at ``read_ts`` give MVCC snapshot
+  semantics (paper §3.3 "Version management" — old functional states are the
+  versioned arrays).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .vertex_table import VertexTable
+from repro.kernels import ops as kops
+
+__all__ = ["EdgePool", "PoolSpec", "make_edge_pool", "apply_edge_updates",
+           "get_neighbors", "live_edges", "defrag"]
+
+INT_MAX = jnp.int32(0x7FFFFFFF)
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    n_blocks: int          # total blocks in the pool
+    block_size: int = 16   # entries per block (lane-friendly)
+    k_max: int = 256       # max per-batch vertex compactions (fast path)
+    dmax: int = 4096       # max edge-array entries handled by the fast path
+    compact_impl: str = "auto"
+    # edge-storage policy (baseline paradigms on the same substrate):
+    #  'snaplog' — the paper: dedup compaction, log segment = snapshot size
+    #  'grow'    — log-structured (LiveGraph/GTX-style): no dedup, double cap
+    #  'sorted'  — Spruce-style: dedup + sort by dst, fixed small buffer
+    policy: str = "snaplog"
+    buf_blocks: int = 1    # 'sorted' policy: log buffer size (blocks)
+
+    @property
+    def capacity_entries(self) -> int:
+        return self.n_blocks * self.block_size
+
+
+class EdgePool(NamedTuple):
+    dst: jnp.ndarray       # int32[n_blocks, BS] destination OFFSETS (edge chain); -1 empty
+    weight: jnp.ndarray    # float32[n_blocks, BS]; 0.0 = NULL tombstone
+    ts: jnp.ndarray        # int32[n_blocks, BS]
+    owner: jnp.ndarray     # int32[n_blocks] owning vertex offset, -1 free
+    next_block: jnp.ndarray  # int32 scalar bump allocator
+    garbage: jnp.ndarray   # int32 scalar — stale entries since last defrag
+    clock: jnp.ndarray     # int32 scalar — global timestamp
+    overflow: jnp.ndarray  # int32 scalar — pool-exhaustion events
+
+
+def make_edge_pool(spec: PoolSpec) -> EdgePool:
+    nb, bs = spec.n_blocks, spec.block_size
+    z = jnp.zeros((), jnp.int32)
+    return EdgePool(
+        dst=jnp.full((nb, bs), -1, jnp.int32),
+        weight=jnp.zeros((nb, bs), jnp.float32),
+        ts=jnp.zeros((nb, bs), jnp.int32),
+        owner=jnp.full((nb,), -1, jnp.int32),
+        next_block=z, garbage=z, clock=jnp.ones((), jnp.int32), overflow=z,
+    )
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def _group_by(u: jnp.ndarray, valid: jnp.ndarray):
+    """Stable-sort ops by target vertex. Returns dict with the sorted view."""
+    B = u.shape[0]
+    key = jnp.where(valid, u, INT_MAX)
+    order = jnp.argsort(key, stable=True)
+    su = key[order]
+    prev = jnp.concatenate([jnp.full((1,), -1, su.dtype), su[:-1]])
+    first = (su != prev) & (su < INT_MAX)
+    gid = jnp.cumsum(first.astype(jnp.int32)) - 1  # group index per sorted op
+    # start index of each op's group:
+    idx = jnp.arange(B, dtype=jnp.int32)
+    start_of_group = jnp.where(first, idx, 0)
+    start = jax.lax.cummax(start_of_group)
+    rank = idx - start
+    # per-group info at group slots (positions 0..ng-1):
+    gstart = jnp.nonzero(first, size=B, fill_value=B)[0].astype(jnp.int32)
+    gu = su[jnp.clip(gstart, 0, B - 1)]
+    nxt = jnp.concatenate([gstart[1:], jnp.full((1,), B, jnp.int32)])
+    # count = next group start - start, but next fill is B and invalid groups
+    # must count 0:
+    ng = jnp.sum(first.astype(jnp.int32))
+    garange = jnp.arange(B, dtype=jnp.int32)
+    gvalid = garange < ng
+    # total valid ops:
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    gend = jnp.where(garange + 1 < ng, nxt, nvalid)
+    gcount = jnp.where(gvalid, gend - gstart, 0)
+    return dict(order=order, su=su, gid=gid, rank=rank, gstart=gstart, gu=gu,
+                gcount=gcount, gvalid=gvalid, ng=ng)
+
+
+def _gather_vertex_entries(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                           u: jnp.ndarray, width: int):
+    """Gather up to ``width`` occupied entries of each vertex in ``u``.
+
+    Returns (dst, w, ts) of shape (K, width) plus validity handled via size.
+    """
+    K = u.shape[0]
+    bs = spec.block_size
+    uc = jnp.clip(u, 0, vt.size.shape[0] - 1)
+    start = vt.start_block[uc]
+    size = jnp.where(u >= 0, vt.size[uc], 0)
+    e = jnp.arange(width, dtype=jnp.int32)[None, :]
+    blk = start[:, None] + e // bs
+    lane = e % bs
+    ok = (e < size[:, None]) & (start[:, None] >= 0)
+    blk = jnp.where(ok, blk, 0)
+    d = jnp.where(ok, pool.dst[blk, lane], -1)
+    w = jnp.where(ok, pool.weight[blk, lane], 0.0)
+    t = jnp.where(ok, pool.ts[blk, lane], 0)
+    return d, w, t, size
+
+
+def _scatter_entries(pool: EdgePool, tgt_block, lane, valid, d, w, t,
+                     owner_of_block=None):
+    nb = pool.dst.shape[0]
+    tb = jnp.where(valid, tgt_block, nb)
+    pool = pool._replace(
+        dst=pool.dst.at[tb, lane].set(d, mode="drop"),
+        weight=pool.weight.at[tb, lane].set(w, mode="drop"),
+        ts=pool.ts.at[tb, lane].set(t, mode="drop"),
+    )
+    return pool
+
+
+# --------------------------------------------------------------------------
+# per-vertex compaction (fast path) — paper Alg. 2 batched over K_MAX vertices
+# --------------------------------------------------------------------------
+
+def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                      ku: jnp.ndarray, kmask: jnp.ndarray,
+                      kincoming: jnp.ndarray):
+    """Compact + grow the edge arrays of vertices ``ku`` (masked).
+
+    New capacity (entries) = snapB + max(snapB, incomingB, 1) blocks where
+    snapB = blocks(d') — the paper's "new array of capacity 2d, reserving d
+    log entries", generalized so the pending batch always fits.
+    """
+    bs = spec.block_size
+    K = ku.shape[0]
+    n_cap = vt.size.shape[0]
+    nb = pool.dst.shape[0]
+
+    d0, w0, t0, size0 = _gather_vertex_entries(spec, pool, vt,
+                                               jnp.where(kmask, ku, -1),
+                                               spec.dmax)
+    if spec.policy == "grow":
+        # log-structured baseline: copy everything, no dedup (reads pay O(log))
+        cd, cw, ct, cnt = d0, w0, t0, size0
+    else:
+        cd, cw, ct, cnt = kops.compact_rows(d0, w0, t0, size0,
+                                            impl=spec.compact_impl)
+        if spec.policy == "sorted":
+            # Spruce-style: snapshot kept sorted by destination
+            D = cd.shape[1]
+            pos = jnp.arange(D, dtype=jnp.int32)[None, :]
+            skey = jnp.where(pos < cnt[:, None], cd, INT_MAX)
+            o = jnp.argsort(skey, axis=-1, stable=True)
+            cd = jnp.take_along_axis(cd, o, -1)
+            cw = jnp.take_along_axis(cw, o, -1)
+            ct = jnp.take_along_axis(ct, o, -1)
+    cnt = jnp.where(kmask, cnt, 0)
+
+    snap_blocks = _cdiv(cnt, bs)
+    if spec.policy == "sorted":
+        log_blocks = jnp.full_like(snap_blocks, spec.buf_blocks)
+    else:  # 'snaplog' (paper: log = snapshot) and 'grow' (double capacity)
+        log_blocks = jnp.maximum(jnp.maximum(snap_blocks, _cdiv(kincoming, bs)), 1)
+    log_blocks = jnp.maximum(log_blocks, _cdiv(kincoming, bs))
+    new_blocks = jnp.where(kmask, snap_blocks + log_blocks, 0)
+
+    base = pool.next_block + jnp.cumsum(new_blocks) - new_blocks
+    total = jnp.sum(new_blocks)
+    fits = pool.next_block + total <= nb  # caller guarantees via defrag check
+    kmask = kmask & fits
+
+    # write compacted entries into the new extents
+    e = jnp.arange(spec.dmax, dtype=jnp.int32)[None, :]
+    tgt_blk = base[:, None] + e // bs
+    lane = jnp.broadcast_to(e % bs, (K, spec.dmax))
+    ok = kmask[:, None] & (e < cnt[:, None])
+    pool = _scatter_entries(pool, tgt_blk.reshape(-1), lane.reshape(-1),
+                            ok.reshape(-1), cd.reshape(-1), cw.reshape(-1),
+                            ct.reshape(-1))
+
+    # clear slots beyond the compacted prefix inside the new extents
+    cap_entries = new_blocks * bs
+    tail_ok = kmask[:, None] & (e >= cnt[:, None]) & (e < cap_entries[:, None])
+    pool = _scatter_entries(pool, tgt_blk.reshape(-1), lane.reshape(-1),
+                            tail_ok.reshape(-1),
+                            jnp.full((K * spec.dmax,), -1, jnp.int32),
+                            jnp.zeros((K * spec.dmax,), jnp.float32),
+                            jnp.zeros((K * spec.dmax,), jnp.int32))
+
+    # ownership: new extents -> u ; old extents -> -1 (garbage)
+    MB = _cdiv(spec.dmax, bs) * 2 + 2
+    b = jnp.arange(MB, dtype=jnp.int32)[None, :]
+    new_ob = jnp.where(kmask[:, None] & (b < new_blocks[:, None]),
+                       base[:, None] + b, nb)
+    ucast = jnp.broadcast_to(ku[:, None], (K, MB))
+    owner = pool.owner.at[new_ob.reshape(-1)].set(ucast.reshape(-1), mode="drop")
+    uc = jnp.clip(ku, 0, n_cap - 1)
+    old_start = jnp.where(kmask, vt.start_block[uc], -1)
+    old_blocks = jnp.where(kmask & (old_start >= 0), _cdiv(vt.cap[uc], bs), 0)
+    old_ob = jnp.where(kmask[:, None] & (b < old_blocks[:, None]),
+                       old_start[:, None] + b, nb)
+    owner = owner.at[old_ob.reshape(-1)].set(-1, mode="drop")
+
+    garbage = pool.garbage + jnp.sum(jnp.where(kmask, vt.size[uc], 0) - cnt)
+    pool = pool._replace(owner=owner,
+                         next_block=pool.next_block + jnp.where(fits, total, 0),
+                         garbage=garbage,
+                         overflow=pool.overflow + jnp.where(fits, 0, 1))
+
+    # vertex table bookkeeping
+    tgt = jnp.where(kmask, ku, n_cap)
+    vt = vt._replace(
+        deg=vt.deg.at[tgt].set(cnt, mode="drop"),
+        size=vt.size.at[tgt].set(cnt, mode="drop"),
+        cap=vt.cap.at[tgt].set(cap_entries, mode="drop"),
+        start_block=vt.start_block.at[tgt].set(jnp.where(new_blocks > 0, base,
+                                                         -1), mode="drop"),
+    )
+    return pool, vt
+
+
+# --------------------------------------------------------------------------
+# global defragmentation — vectorized rebuild, GC, vertex-offset recycling
+# --------------------------------------------------------------------------
+
+def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+           incoming: jnp.ndarray | None = None):
+    """Rebuild the pool compactly in vertex order (CSR-like layout).
+
+    * last-writer-wins on (owner, dst) by timestamp, tombstones dropped;
+    * edges from/to deleted vertices dropped;
+    * deleted vertex rows recycled into the free ring (the paper's epoch-safe
+      purge — offsets are only reused after the rebuild, so stale extent
+      references cannot resurrect);
+    * each live vertex gets ``cap = snapB + max(snapB, incomingB, 1)`` blocks
+      (2d discipline, pre-sized for ``incoming`` pending ops per offset).
+    """
+    bs = spec.block_size
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+    N = nb * bs
+    if incoming is None:
+        incoming = jnp.zeros((n_cap,), jnp.int32)
+
+    own = jnp.repeat(pool.owner, bs)
+    d = pool.dst.reshape(-1)
+    w = pool.weight.reshape(-1)
+    t = pool.ts.reshape(-1)
+    # entry liveness: within owner's occupied prefix
+    blk_index = jnp.arange(N, dtype=jnp.int32) // bs
+    lane = jnp.arange(N, dtype=jnp.int32) % bs
+    ownc = jnp.clip(own, 0, n_cap - 1)
+    start = vt.start_block[ownc]
+    pos_in_extent = (blk_index - start) * bs + lane
+    occupied = (own >= 0) & (pos_in_extent >= 0) & (pos_in_extent < vt.size[ownc])
+    src_alive = vt.del_time[ownc] == 0
+    dstc = jnp.clip(d, 0, n_cap - 1)
+    dst_alive = (d >= 0) & (vt.del_time[dstc] == 0)
+    valid = occupied & src_alive & dst_alive & (d >= 0)
+
+    # ---- last-writer-wins on (owner, dst) by ts ----
+    SENT = INT_MAX
+    so = jnp.where(valid, own, SENT)
+    sd = jnp.where(valid, d, SENT)
+    stv = jnp.where(valid, t, 0)
+    order = jnp.lexsort((stv, sd, so))
+    so, sd, sw, stv = so[order], sd[order], w[order], stv[order]
+    sval = so < SENT
+    nxt_o = jnp.concatenate([so[1:], jnp.full((1,), -2, so.dtype)])
+    nxt_d = jnp.concatenate([sd[1:], jnp.full((1,), -2, sd.dtype)])
+    is_last = ((so != nxt_o) | (sd != nxt_d)) & sval
+    if spec.policy == "grow":
+        keep = sval  # log-structured baseline: retain every version
+    else:
+        keep = is_last & (sw != 0)
+
+    # ---- per-vertex live counts & new extents ----
+    so_keep = jnp.where(keep, so, n_cap)
+    d_cnt = jnp.zeros((n_cap,), jnp.int32).at[so_keep].add(1, mode="drop")
+    snapB = _cdiv(d_cnt, bs)
+    has_any = (d_cnt > 0) | (incoming > 0)
+    active_row = vt.del_time == 0
+    if spec.policy == "sorted":
+        base_logB = jnp.full_like(snapB, spec.buf_blocks)
+    else:
+        base_logB = jnp.maximum(snapB, 1)
+    logB = jnp.where(active_row & has_any,
+                     jnp.maximum(base_logB, _cdiv(incoming, bs)), 0)
+    blocks = jnp.where(active_row, snapB + logB, 0)
+    bstart = jnp.cumsum(blocks) - blocks
+    total_blocks = jnp.sum(blocks)
+
+    # ---- write entries into fresh arrays ----
+    # rank of each kept entry within its owner = position among keeps with
+    # same owner; entries are sorted by owner so rank = idx - first_keep_idx
+    # rank via segmented cumsum of keep:
+    keep_i = keep.astype(jnp.int32)
+    csum = jnp.cumsum(keep_i)
+    owner_change = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
+    seg_base = jax.lax.cummax(jnp.where(owner_change, csum - keep_i, 0))
+    rank = csum - 1 - seg_base
+
+    soc = jnp.clip(so, 0, n_cap - 1)
+    entry_pos = bstart[soc] * bs + rank
+    tgt_blk = jnp.where(keep, entry_pos // bs, nb)
+    tgt_lane = entry_pos % bs
+
+    new_dst = jnp.full((nb, bs), -1, jnp.int32).at[tgt_blk, tgt_lane].set(
+        sd, mode="drop")
+    new_w = jnp.zeros((nb, bs), jnp.float32).at[tgt_blk, tgt_lane].set(
+        sw, mode="drop")
+    new_t = jnp.zeros((nb, bs), jnp.int32).at[tgt_blk, tgt_lane].set(
+        stv, mode="drop")
+
+    # ---- block ownership via interval mapping ----
+    bidx = jnp.arange(nb, dtype=jnp.int32)
+    # vertex whose extent contains block b: searchsorted over bstart
+    vown = jnp.searchsorted(bstart + blocks, bidx, side="right").astype(jnp.int32)
+    vownc = jnp.clip(vown, 0, n_cap - 1)
+    inside = (bidx < total_blocks) & (bidx >= bstart[vownc]) & (blocks[vownc] > 0)
+    new_owner = jnp.where(inside, vownc, -1)
+
+    # ---- recycle deleted vertex rows into the free ring ----
+    deleted = vt.del_time > 0
+    del_idx = jnp.nonzero(deleted, size=n_cap, fill_value=n_cap)[0].astype(jnp.int32)
+    n_del = jnp.sum(deleted.astype(jnp.int32))
+    r = jnp.arange(n_cap, dtype=jnp.int32)
+    q_pos = (vt.free_tail + r) % n_cap
+    q_tgt = jnp.where(r < n_del, q_pos, n_cap)
+    free_q = vt.free_q.at[q_tgt].set(del_idx, mode="drop")
+    dtgt = jnp.where(deleted, r, n_cap)
+    del_time = vt.del_time.at[dtgt].set(-1, mode="drop")
+
+    vt = vt._replace(
+        deg=jnp.where(active_row, d_cnt, 0),
+        size=jnp.where(active_row, d_cnt, 0),
+        cap=jnp.where(active_row, blocks * bs, 0),
+        start_block=jnp.where(active_row & (blocks > 0), bstart, -1),
+        free_q=free_q,
+        free_tail=vt.free_tail + n_del,
+        del_time=del_time,
+    )
+    pool = pool._replace(dst=new_dst, weight=new_w, ts=new_t, owner=new_owner,
+                         next_block=total_blocks,
+                         garbage=jnp.zeros((), jnp.int32))
+    return pool, vt
+
+
+# --------------------------------------------------------------------------
+# batched edge updates (insert / update / delete): the paper's O(1) append
+# --------------------------------------------------------------------------
+
+def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                       u: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+                       mask: jnp.ndarray):
+    """Apply a batch of edge operations given vertex OFFSETS.
+
+    ``w == 0`` is a deletion (paper: NULL weight log). Ops are timestamped
+    ``clock + batch_index`` — the deterministic analogue of the paper's
+    per-log fetch_add ordering. Returns (pool, vt).
+    """
+    B = u.shape[0]
+    bs = spec.block_size
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+    valid = mask & (u >= 0) & (v >= 0)
+    ts = pool.clock + jnp.arange(B, dtype=jnp.int32)
+
+    g = _group_by(u, valid)
+    guc = jnp.clip(g["gu"], 0, n_cap - 1)
+    gsize = jnp.where(g["gvalid"], vt.size[guc], 0)
+    gcap = jnp.where(g["gvalid"], vt.cap[guc], 0)
+    need = gsize + g["gcount"]
+    govf = g["gvalid"] & (need > gcap)
+
+    # fast-path eligibility: whole current array fits the compaction buffer
+    small_ok = govf & (gcap <= spec.dmax) & (gsize <= spec.dmax)
+    n_ovf = jnp.sum(govf.astype(jnp.int32))
+    n_small = jnp.sum(small_ok.astype(jnp.int32))
+    jumbo = n_ovf != n_small
+
+    kidx = jnp.nonzero(small_ok, size=spec.k_max, fill_value=B)[0]
+    kmask = kidx < B
+    truncated = n_small > spec.k_max
+    ku = jnp.where(kmask, g["gu"][jnp.clip(kidx, 0, B - 1)], -1)
+    kinc = jnp.where(kmask, g["gcount"][jnp.clip(kidx, 0, B - 1)], 0)
+
+    # upper bound on blocks the fast path may allocate:
+    worst = jnp.sum(jnp.where(kmask, _cdiv(jnp.minimum(gsize[jnp.clip(kidx, 0, B - 1)],
+                                                       spec.dmax), bs) * 2 +
+                              _cdiv(kinc, bs) + 2, 0))
+    pool_tight = pool.next_block + worst > nb
+    half_garbage = pool.garbage > (nb * bs) // 2
+    do_defrag = jumbo | truncated | pool_tight | half_garbage
+
+    incoming_vec = jnp.zeros((n_cap,), jnp.int32).at[
+        jnp.where(g["gvalid"], g["gu"], n_cap)].add(g["gcount"], mode="drop")
+
+    def _defrag_path(args):
+        pool, vt = args
+        return defrag(spec, pool, vt, incoming_vec)
+
+    def _fast_path(args):
+        pool, vt = args
+        return _compact_vertices(spec, pool, vt, ku, kmask & ~do_defrag, kinc)
+
+    pool, vt = jax.lax.cond(do_defrag, _defrag_path, _fast_path, (pool, vt))
+
+    # ---- append every op at size + rank (log append, O(1) per op) ----
+    order = g["order"]
+    su = g["su"]
+    suc = jnp.clip(su, 0, n_cap - 1)
+    base = jnp.where(su < INT_MAX, vt.size[suc], 0)
+    slot = base + g["rank"]
+    cap_now = jnp.where(su < INT_MAX, vt.cap[suc], 0)
+    start = vt.start_block[suc]
+    op_ok = (su < INT_MAX) & (slot < cap_now) & (start >= 0)
+    dropped = jnp.sum(((su < INT_MAX) & ~op_ok).astype(jnp.int32))
+
+    sv = v[order]
+    sw_ = w[order]
+    sts = ts[order]
+    tgt_blk = jnp.where(op_ok, start + slot // bs, nb)
+    pool = _scatter_entries(pool, tgt_blk, slot % bs, op_ok, sv, sw_, sts)
+
+    # size += written count per group
+    wrote = op_ok.astype(jnp.int32)
+    wrote_per_group = jnp.zeros((B,), jnp.int32).at[g["gid"]].add(
+        jnp.where(su < INT_MAX, wrote, 0))
+    gtgt = jnp.where(g["gvalid"], g["gu"], n_cap)
+    vt = vt._replace(size=vt.size.at[gtgt].add(
+        wrote_per_group, mode="drop"))
+
+    # updates/deletes eventually strand one stale entry each; a cheap upper
+    # estimate (¼ of writes) drives the proactive half-garbage defrag trigger
+    pool = pool._replace(clock=pool.clock + B,
+                         garbage=pool.garbage + jnp.sum(wrote) // 4,
+                         overflow=pool.overflow + jnp.where(dropped > 0, 1, 0))
+    return pool, vt
+
+
+# --------------------------------------------------------------------------
+# reads
+# --------------------------------------------------------------------------
+
+def get_neighbors(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                  u: jnp.ndarray, read_ts=None, width: int | None = None):
+    """MVCC get-neighbors for a batch of vertex offsets.
+
+    Returns (dst, weight, ts, count) with rows front-packed in reverse-scan
+    order (paper's get_ngbrs = compaction-style scan, O(d))."""
+    width = spec.dmax if width is None else width
+    n_cap = vt.size.shape[0]
+    d, w, t, size = _gather_vertex_entries(spec, pool, vt, u, width)
+    # destination-visibility filter (paper: Del_time makes a vertex invisible)
+    dt = vt.del_time[jnp.clip(d, 0, n_cap - 1)]
+    if read_ts is None:
+        dead = (d >= 0) & (dt != 0)
+    else:
+        rts = jnp.asarray(read_ts, jnp.int32)
+        dead = (d >= 0) & (((dt > 0) & (dt <= rts)) | (dt == -1))
+    d = jnp.where(dead, -1, d)
+    rts = None if read_ts is None else jnp.asarray(read_ts, jnp.int32)
+    return kops.compact_rows(d, w, t, size, read_ts=rts, impl=spec.compact_impl)
+
+
+def live_edges(spec: PoolSpec, pool: EdgePool, vt: VertexTable, read_ts=None):
+    """Flat snapshot of live edges: (owner, dst, weight, ts, keep_mask),
+    sorted by (owner, dst). Input to analytics CSR construction."""
+    bs = spec.block_size
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+    N = nb * bs
+    own = jnp.repeat(pool.owner, bs)
+    d = pool.dst.reshape(-1)
+    w = pool.weight.reshape(-1)
+    t = pool.ts.reshape(-1)
+    blk_index = jnp.arange(N, dtype=jnp.int32) // bs
+    lane = jnp.arange(N, dtype=jnp.int32) % bs
+    ownc = jnp.clip(own, 0, n_cap - 1)
+    start = vt.start_block[ownc]
+    pos = (blk_index - start) * bs + lane
+    occupied = (own >= 0) & (pos >= 0) & (pos < vt.size[ownc])
+    alive = (vt.del_time[ownc] == 0)
+    dstc = jnp.clip(d, 0, n_cap - 1)
+    dst_ok = (d >= 0) & (vt.del_time[dstc] == 0)
+    valid = occupied & alive & dst_ok
+    if read_ts is not None:
+        valid = valid & (t <= jnp.asarray(read_ts, jnp.int32))
+    SENT = INT_MAX
+    so = jnp.where(valid, own, SENT)
+    sd = jnp.where(valid, d, SENT)
+    stv = jnp.where(valid, t, 0)
+    order = jnp.lexsort((stv, sd, so))
+    so, sd, sw, stv = so[order], sd[order], w[order], stv[order]
+    nxt_o = jnp.concatenate([so[1:], jnp.full((1,), -2, so.dtype)])
+    nxt_d = jnp.concatenate([sd[1:], jnp.full((1,), -2, sd.dtype)])
+    is_last = ((so != nxt_o) | (sd != nxt_d)) & (so < SENT)
+    keep = is_last & (sw != 0)
+    return so, sd, sw, stv, keep

@@ -1,0 +1,77 @@
+"""Vertex-ID key handling.
+
+IDs live in a universe [0, 2^x). JAX runs without x64, so keys are carried as
+(..., 2) uint32 arrays ``[hi, lo]`` (hi = bits 32..63, lo = bits 0..31). All
+bit arithmetic is static-shift only — layer fan-outs are compile-time
+constants, so extraction lowers to shifts/ands on the VPU.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pack_keys", "unpack_keys", "extract_bits", "key_sort_order"]
+
+
+def pack_keys(ids, key_bits: int) -> jnp.ndarray:
+    """Python/numpy ints (or uint32/uint64 array) -> (..., 2) uint32 keys."""
+    arr = np.asarray(ids, dtype=np.uint64)
+    if key_bits < 64:
+        assert int(arr.max(initial=0)) < (1 << key_bits), "ID exceeds universe"
+    hi = (arr >> np.uint64(32)).astype(np.uint32)
+    lo = (arr & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return jnp.stack([jnp.asarray(hi), jnp.asarray(lo)], axis=-1)
+
+
+def unpack_keys(keys) -> np.ndarray:
+    """(..., 2) uint32 keys -> numpy uint64."""
+    k = np.asarray(keys, dtype=np.uint64)
+    return (k[..., 0] << np.uint64(32)) | k[..., 1]
+
+
+def extract_bits(keys: jnp.ndarray, start_lsb: int, width: int) -> jnp.ndarray:
+    """Extract ``width`` bits whose least-significant absolute bit index is
+    ``start_lsb`` (0 = LSB of the 64-bit value). Returns int32 in [0, 2^width).
+
+    start_lsb/width are static; the three cases below are resolved at trace
+    time.
+    """
+    assert 0 <= width <= 31, "layer fanout bits must fit int32"
+    hi, lo = keys[..., 0], keys[..., 1]
+    mask = jnp.uint32((1 << width) - 1)
+    if width == 0:
+        return jnp.zeros(hi.shape, jnp.int32)
+    if start_lsb >= 32:
+        v = (hi >> jnp.uint32(start_lsb - 32)) & mask
+    elif start_lsb + width <= 32:
+        v = (lo >> jnp.uint32(start_lsb)) & mask
+    else:  # spans the word boundary
+        lo_bits = 32 - start_lsb
+        low_part = lo >> jnp.uint32(start_lsb)
+        high_part = hi & jnp.uint32((1 << (start_lsb + width - 32)) - 1)
+        v = (high_part << jnp.uint32(lo_bits)) | low_part
+    return v.astype(jnp.int32)
+
+
+def key_sort_order(keys: jnp.ndarray) -> jnp.ndarray:
+    """Stable order sorting keys lexicographically by (hi, lo)."""
+    return jnp.lexsort((keys[..., 1], keys[..., 0]))
+
+
+def layer_bit_offsets(fanout_bits: Sequence[int], key_bits: int):
+    """LSB offset of each layer's segment. Layer 0 owns the top ``a_0`` bits
+    of the x-bit key. If sum(a) > x (baseline configs), the key is logically
+    left-padded with zeros: the root layer simply has dead high branches."""
+    total = sum(fanout_bits)
+    offs = []
+    consumed = 0
+    for a in fanout_bits:
+        offs.append(total - consumed - a)
+        consumed += a
+    # Shift so bit 0 of the logical key = bit 0 of the stored key; when
+    # total > key_bits the extra high bits read as zero automatically only if
+    # they exist in the 64-bit container — enforce total <= 64.
+    assert total <= 64, "configuration exceeds 64-bit container"
+    return offs

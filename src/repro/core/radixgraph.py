@@ -1,0 +1,322 @@
+"""RadixGraph — the paper's full structure behind an ID-level API.
+
+Host-side wrapper owning a ``GraphState`` pytree plus jitted, padded-batch
+update/read functions. All device work is pure; every mutation returns a new
+state, and retained old states are exactly the paper's MVCC versioned arrays.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import edgepool as ep
+from . import sort as sort_mod
+from . import vertex_table as vt_mod
+from .keys import pack_keys, unpack_keys
+from .sort import SortSpec, SortState
+from .sort_optimizer import SortConfig, optimize_sort
+from .vertex_table import VertexTable
+
+__all__ = ["RadixGraph", "GraphState", "GraphSnapshot"]
+
+
+class GraphState(NamedTuple):
+    sort: SortState
+    vt: VertexTable
+    pool: ep.EdgePool
+
+
+class GraphSnapshot(NamedTuple):
+    """CSR view of the live graph (analytics input). Padded to m_cap."""
+
+    indptr: jnp.ndarray   # int32[n_cap + 1]
+    dst: jnp.ndarray      # int32[m_cap] destination offsets
+    weight: jnp.ndarray   # float32[m_cap]
+    n_rows: jnp.ndarray   # int32 — vertex-table high-water mark
+    m: jnp.ndarray        # int32 — live edge count
+    active: jnp.ndarray   # bool[n_cap] — row is a live vertex
+    ids: jnp.ndarray      # uint32[n_cap, 2] — row -> vertex ID
+
+
+# --------------------------------------------------------------------------
+# jitted state transitions (static: sort spec, pool spec, batch size)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _add_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                  keys, mask):
+    st, vt, off, created = vt_mod.ensure_vertices(sspec, state.sort, state.vt,
+                                                  keys, mask)
+    return GraphState(st, vt, state.pool), off, created
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _delete_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                     keys, mask):
+    ts = state.pool.clock
+    st, vt, off, found = vt_mod.delete_vertices(sspec, state.sort, state.vt,
+                                                keys, mask, ts)
+    pool = state.pool._replace(clock=state.pool.clock + 1)
+    return GraphState(st, vt, pool), off, found
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _update_edges(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                  src_keys, dst_keys, w, mask):
+    B = src_keys.shape[0]
+    keys = jnp.concatenate([src_keys, dst_keys], axis=0)
+    m2 = jnp.concatenate([mask, mask])
+    st, vt, off, _ = vt_mod.ensure_vertices(sspec, state.sort, state.vt,
+                                            keys, m2)
+    u, v = off[:B], off[B:]
+    pool, vt = ep.apply_edge_updates(pspec, state.pool, vt, u, v, w, mask)
+    return GraphState(st, vt, pool)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _lookup(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState, keys):
+    return sort_mod.lookup(sspec, state.sort, keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _neighbors(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState, off,
+               width: int, read_ts):
+    return ep.get_neighbors(pspec, state.pool, state.vt, off,
+                            read_ts=read_ts, width=width)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _snapshot(sspec: SortSpec, pspec: ep.PoolSpec, m_cap: int,
+              state: GraphState, read_ts):
+    vt = state.vt
+    n_cap = vt.size.shape[0]
+    so, sd, sw, stv, keep = ep.live_edges(pspec, state.pool, vt,
+                                          read_ts=read_ts)
+    m = jnp.sum(keep.astype(jnp.int32))
+    counts = jnp.zeros((n_cap,), jnp.int32).at[
+        jnp.where(keep, so, n_cap)].add(1, mode="drop")
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)])
+    # entries already sorted by (owner, dst); pack keeps to the front
+    kpos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    tgt = jnp.where(keep, kpos, m_cap)
+    dst = jnp.full((m_cap,), -1, jnp.int32).at[tgt].set(sd, mode="drop")
+    wgt = jnp.zeros((m_cap,), jnp.float32).at[tgt].set(sw, mode="drop")
+    active = vt.del_time == 0
+    return GraphSnapshot(indptr=indptr, dst=dst, weight=wgt,
+                         n_rows=vt.num_rows, m=m, active=active, ids=vt.ids)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _defrag(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState):
+    pool, vt = ep.defrag(pspec, state.pool, state.vt)
+    return GraphState(state.sort, vt, pool)
+
+
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class RadixGraph:
+    """Dynamic graph store. ``n_max`` vertices / ``pool_blocks`` blocks are
+    hard capacities (static shapes); overflow is counted, never UB."""
+
+    n_max: int
+    key_bits: int = 32
+    expected_n: Optional[int] = None
+    layers: Optional[int] = None
+    pool_blocks: Optional[int] = None
+    block_size: int = 16
+    k_max: int = 256
+    dmax: int = 4096
+    batch: int = 4096          # padded op-batch size
+    undirected: bool = False
+    compact_impl: str = "auto"
+    capacity_factor: Optional[float] = None
+    policy: str = "snaplog"    # 'snaplog' (paper) | 'grow' | 'sorted' baselines
+    buf_blocks: int = 1
+    sort_config: Optional[SortConfig] = None  # override the optimizer (baselines)
+
+    def __post_init__(self):
+        n = self.expected_n or self.n_max
+        # paper setting: l = lglg(u) (e.g. 5 for u = 2^32); DP prunes a_i = 0
+        l = self.layers or max(2, round(math.log2(max(2, self.key_bits))))
+        self.config: SortConfig = self.sort_config or optimize_sort(
+            n, self.key_bits, l)
+        self.sort_spec = SortSpec.from_config(self.config, self.n_max,
+                                              self.capacity_factor)
+        nb = self.pool_blocks or max(64, (8 * self.n_max) // self.block_size)
+        self.pool_spec = ep.PoolSpec(n_blocks=nb, block_size=self.block_size,
+                                     k_max=self.k_max, dmax=self.dmax,
+                                     compact_impl=self.compact_impl,
+                                     policy=self.policy,
+                                     buf_blocks=self.buf_blocks)
+        self.state = GraphState(
+            sort=sort_mod.make_sort(self.sort_spec),
+            vt=vt_mod.make_vertex_table(self.n_max),
+            pool=ep.make_edge_pool(self.pool_spec),
+        )
+        self._versions: list[tuple[int, GraphState]] = []
+
+    # ---- batching helpers ----
+    def _pad(self, arr, fill, dtype):
+        a = np.asarray(arr)
+        B = self.batch
+        n = a.shape[0]
+        nb = ((n + B - 1) // B) * B if n else B
+        out = np.full((nb,) + a.shape[1:], fill, dtype=dtype)
+        if n:
+            out[:n] = a
+        mask = np.zeros((nb,), bool)
+        mask[:n] = True
+        return out, mask
+
+    def _key_batches(self, ids):
+        ids = np.asarray(ids, np.uint64)
+        padded, mask = self._pad(ids, 0, np.uint64)
+        for i in range(0, padded.shape[0], self.batch):
+            yield (pack_keys(padded[i:i + self.batch], self.key_bits),
+                   jnp.asarray(mask[i:i + self.batch]))
+
+    # ---- public API ----
+    def add_vertices(self, ids):
+        offs = []
+        for keys, mask in self._key_batches(ids):
+            self.state, off, _ = _add_vertices(self.sort_spec, self.pool_spec,
+                                               self.state, keys, mask)
+            offs.append(np.asarray(off))
+        n = len(np.asarray(ids))
+        return np.concatenate(offs)[:n] if offs else np.zeros(0, np.int32)
+
+    def delete_vertices(self, ids):
+        for keys, mask in self._key_batches(ids):
+            self.state, _, _ = _delete_vertices(self.sort_spec, self.pool_spec,
+                                                self.state, keys, mask)
+
+    def lookup(self, ids):
+        out = []
+        n = len(np.asarray(ids))
+        for keys, mask in self._key_batches(ids):
+            out.append(np.asarray(_lookup(self.sort_spec, self.pool_spec,
+                                          self.state, keys)))
+        return np.concatenate(out)[:n] if out else np.zeros(0, np.int32)
+
+    def _edge_batches(self, src, dst, w):
+        src = np.asarray(src, np.uint64)
+        dst = np.asarray(dst, np.uint64)
+        w = np.asarray(w, np.float32)
+        if self.undirected:
+            # interleave directions so the mixed-op stream order is preserved
+            # (op i's two directions land at timestamps 2i, 2i+1)
+            s2 = np.empty(2 * len(src), np.uint64)
+            d2 = np.empty_like(s2)
+            w2 = np.empty(2 * len(src), np.float32)
+            s2[0::2], s2[1::2] = src, dst
+            d2[0::2], d2[1::2] = dst, src
+            w2[0::2], w2[1::2] = w, w
+            src, dst, w = s2, d2, w2
+        ps, mask = self._pad(src, 0, np.uint64)
+        pd, _ = self._pad(dst, 0, np.uint64)
+        pw, _ = self._pad(w, 0, np.float32)
+        B = self.batch
+        for i in range(0, ps.shape[0], B):
+            yield (pack_keys(ps[i:i + B], self.key_bits),
+                   pack_keys(pd[i:i + B], self.key_bits),
+                   jnp.asarray(pw[i:i + B]), jnp.asarray(mask[i:i + B]))
+
+    def add_edges(self, src, dst, weight=None):
+        w = np.ones(len(np.asarray(src)), np.float32) if weight is None \
+            else np.asarray(weight, np.float32)
+        assert np.all(w != 0), "weight 0 is the NULL tombstone; use delete_edges"
+        for sk, dk, pw, mask in self._edge_batches(src, dst, w):
+            self.state = _update_edges(self.sort_spec, self.pool_spec,
+                                       self.state, sk, dk, pw, mask)
+
+    update_edges = add_edges  # same log-append op (paper: insert == update)
+
+    def delete_edges(self, src, dst):
+        w = np.zeros(len(np.asarray(src)), np.float32)  # NULL tombstones
+        for sk, dk, pw, mask in self._edge_batches(src, dst, w):
+            self.state = _update_edges(self.sort_spec, self.pool_spec,
+                                       self.state, sk, dk, pw, mask)
+
+    def apply_ops(self, src, dst, weight):
+        """Order-preserving mixed stream: weight==0 deletes, else insert/update
+        (the paper's mixed-updates workload, Fig. 9)."""
+        for sk, dk, pw, mask in self._edge_batches(src, dst,
+                                                   np.asarray(weight, np.float32)):
+            self.state = _update_edges(self.sort_spec, self.pool_spec,
+                                       self.state, sk, dk, pw, mask)
+
+    def neighbors(self, ids, width=None, read_ts=None, as_ids=True):
+        """Get-neighbors for a batch of vertex IDs (paper: O(d) per vertex)."""
+        off = jnp.asarray(self.lookup(ids))
+        width = width or self.pool_spec.dmax
+        d, w, t, cnt = _neighbors(self.sort_spec, self.pool_spec, self.state,
+                                  off, width, read_ts)
+        d, w, cnt = np.asarray(d), np.asarray(w), np.asarray(cnt)
+        out = []
+        ids_np = np.asarray(self.state.vt.ids)
+        for i in range(d.shape[0]):
+            o = d[i, :cnt[i]]
+            if as_ids:
+                hi = ids_np[o, 0].astype(np.uint64)
+                lo = ids_np[o, 1].astype(np.uint64)
+                out.append(((hi << np.uint64(32)) | lo, w[i, :cnt[i]]))
+            else:
+                out.append((o, w[i, :cnt[i]]))
+        return out
+
+    def snapshot(self, read_ts=None, m_cap=None) -> GraphSnapshot:
+        m_cap = m_cap or self.pool_spec.capacity_entries
+        return _snapshot(self.sort_spec, self.pool_spec, m_cap, self.state,
+                         read_ts)
+
+    @property
+    def current_ts(self) -> int:
+        """Timestamp of the latest applied operation (clock points one past)."""
+        return int(self.state.pool.clock) - 1
+
+    def checkpoint_version(self, label: Optional[int] = None):
+        """Retain the current immutable state (MVCC versioned arrays).
+        Returns the version timestamp: reads at read_ts=this see exactly the
+        current contents."""
+        ts = self.current_ts
+        self._versions.append((label if label is not None else ts, self.state))
+        return ts
+
+    def defrag(self):
+        self.state = _defrag(self.sort_spec, self.pool_spec, self.state)
+
+    # ---- introspection ----
+    @property
+    def num_vertices(self) -> int:
+        return int(vt_mod.num_active(self.state.vt))
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.snapshot().m)
+
+    def memory_bytes(self, materialized=True) -> int:
+        """Paper-comparable memory: materialized SORT slots (4B), vertex rows
+        (32B as in Fig. 3), occupied edge blocks (12B/entry: dst+weight+ts).
+        materialized=False reports full static pool allocation instead."""
+        if materialized:
+            sort_b = int(sort_mod.materialized_slots(self.sort_spec,
+                                                     self.state.sort)) * 4
+            vrows = int(self.state.vt.num_rows) * 32
+            blocks = int(jnp.sum((self.state.pool.owner >= 0).astype(jnp.int32)))
+            return sort_b + vrows + blocks * self.pool_spec.block_size * 12
+        sort_b = sum(self.sort_spec.pool_sizes()) * 4
+        vrows = self.n_max * 32
+        return sort_b + vrows + self.pool_spec.capacity_entries * 12
+
+    @property
+    def overflowed(self) -> bool:
+        return bool(int(self.state.sort.overflow) or int(self.state.vt.overflow)
+                    or int(self.state.pool.overflow))

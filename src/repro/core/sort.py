@@ -1,0 +1,188 @@
+"""SORT — Space-Optimized Radix Tree, functional JAX implementation.
+
+TPU adaptation of the paper's pointer structure (§3.1, Algorithm 1):
+
+* each layer is a flat **node pool**: an int32 array of ``cap_nodes * 2^{a_i}``
+  slots; a "child pointer" is the child's node id in layer ``i+1``'s pool
+  (-1 = null). The leaf layer stores vertex-table offsets.
+* inserts are **layer-synchronous and batched**: at each layer the whole key
+  batch computes its child slot; keys that miss dedup their slots
+  (sort + first-occurrence rank) and bump-allocate node ids — the
+  deterministic equivalent of the paper's CAS/ROWEX protocol.
+* lookups are ``l`` dependent gathers (vectorized over the batch) — this is
+  the hot path fused by the ``sort_lookup`` Pallas kernel.
+
+All functions are jit-compatible; ``SortSpec`` is static (hashable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .keys import extract_bits, layer_bit_offsets
+from .sort_optimizer import SortConfig, optimize_sort
+
+__all__ = ["SortSpec", "SortState", "make_sort", "lookup", "insert_mappings",
+           "delete_keys", "materialized_slots"]
+
+
+@dataclass(frozen=True)
+class SortSpec:
+    """Static structure of a SORT instance."""
+
+    fanout_bits: Tuple[int, ...]
+    key_bits: int
+    node_caps: Tuple[int, ...]   # max nodes per layer (node_caps[0] == 1)
+
+    @property
+    def layers(self) -> int:
+        return len(self.fanout_bits)
+
+    @property
+    def bit_offsets(self) -> Tuple[int, ...]:
+        return tuple(layer_bit_offsets(self.fanout_bits, self.key_bits))
+
+    def pool_sizes(self) -> Tuple[int, ...]:
+        return tuple(c << a for c, a in zip(self.node_caps, self.fanout_bits))
+
+    @staticmethod
+    def from_config(cfg: SortConfig, n_max: int,
+                    capacity_factor: float | None = None) -> "SortSpec":
+        """Derive pool capacities. Worst case: each inserted key instantiates
+        at most one node per layer, and layer i can hold at most
+        2^{s_{i-1}} nodes. ``capacity_factor`` (e.g. 2.0) instead sizes by
+        expected occupancy × factor (reported-memory mode; overflow is
+        counted, never UB)."""
+        caps = [1]
+        prefix = 0
+        for i in range(1, cfg.layers):
+            prefix += cfg.fanout_bits[i - 1]
+            hard = 1 << min(prefix, 40)
+            cap = min(n_max, hard)
+            if capacity_factor is not None:
+                from .sort_optimizer import node_probability
+                suffix = sum(cfg.fanout_bits[i:])
+                exp_nodes = min(n_max, 2 ** max(cfg.key_bits - suffix, 0)) * \
+                    node_probability(cfg.key_bits, min(suffix, cfg.key_bits), n_max)
+                cap = min(cap, max(64, int(exp_nodes * capacity_factor) + 64))
+            caps.append(int(cap))
+        return SortSpec(cfg.fanout_bits, cfg.key_bits, tuple(caps))
+
+
+class SortState(NamedTuple):
+    """Dynamic state (a pytree of device arrays)."""
+
+    pools: Tuple[jnp.ndarray, ...]  # int32 per layer
+    counts: jnp.ndarray             # int32[l] allocated nodes per layer
+    overflow: jnp.ndarray           # int32 scalar — node-pool exhaustion count
+
+
+def make_sort(spec: SortSpec) -> SortState:
+    pools = tuple(jnp.full((s,), -1, jnp.int32) for s in spec.pool_sizes())
+    counts = jnp.zeros((spec.layers,), jnp.int32).at[0].set(1)
+    return SortState(pools, counts, jnp.zeros((), jnp.int32))
+
+
+def _child_slots(spec: SortSpec, i: int, node: jnp.ndarray,
+                 keys: jnp.ndarray) -> jnp.ndarray:
+    idx = extract_bits(keys, spec.bit_offsets[i], spec.fanout_bits[i])
+    return node * (1 << spec.fanout_bits[i]) + idx
+
+
+def lookup(spec: SortSpec, state: SortState, keys: jnp.ndarray) -> jnp.ndarray:
+    """Batched retrieval: (B, 2) uint32 keys -> int32 offsets (-1 = absent)."""
+    B = keys.shape[0]
+    node = jnp.zeros((B,), jnp.int32)
+    valid = jnp.ones((B,), bool)
+    for i in range(spec.layers):
+        slot = _child_slots(spec, i, node, keys)
+        child = state.pools[i][jnp.clip(slot, 0, state.pools[i].shape[0] - 1)]
+        child = jnp.where(valid, child, -1)
+        valid = child >= 0
+        node = jnp.maximum(child, 0)
+    return jnp.where(valid, node, -1)
+
+
+def insert_mappings(spec: SortSpec, state: SortState, keys: jnp.ndarray,
+                    offsets: jnp.ndarray, mask: jnp.ndarray) -> SortState:
+    """Insert key -> offset mappings for entries where ``mask`` is set.
+
+    Duplicate keys within the masked batch MUST carry identical offsets
+    (ensured by the vertex table's intra-batch dedup). Existing mappings are
+    overwritten (used by vertex re-insertion after deletion).
+    """
+    B = keys.shape[0]
+    node = jnp.zeros((B,), jnp.int32)
+    counts = state.counts
+    pools = list(state.pools)
+    overflow = state.overflow
+    active = mask
+    for i in range(spec.layers - 1):
+        pool = pools[i]
+        fan = 1 << spec.fanout_bits[i]
+        slot = _child_slots(spec, i, node, keys)
+        child = pool[jnp.clip(slot, 0, pool.shape[0] - 1)]
+        missing = (child < 0) & active
+        # --- dedup missing slots, allocate node ids at layer i+1 ---
+        SENT = pool.shape[0]  # out-of-range sentinel
+        s = jnp.where(missing, slot, SENT)
+        order = jnp.argsort(s)
+        ss = s[order]
+        prev = jnp.concatenate([jnp.full((1,), -1, ss.dtype), ss[:-1]])
+        first = (ss != prev) & (ss < SENT)
+        ranks = jnp.cumsum(first.astype(jnp.int32)) - 1
+        n_new = jnp.sum(first.astype(jnp.int32))
+        base = counts[i + 1]
+        cap = spec.node_caps[i + 1]
+        fits = base + n_new <= cap
+        overflow = overflow + jnp.where(fits, 0, 1)
+        new_id = jnp.where(fits & first, base + ranks, -2)
+        # scatter new node ids at first-occurrence slots (drop sentinels)
+        tgt = jnp.where(first & fits, ss, SENT)
+        pool = pool.at[tgt].set(new_id, mode="drop")
+        pools[i] = pool
+        counts = counts.at[i + 1].set(jnp.where(fits, base + n_new, base))
+        child = pool[jnp.clip(slot, 0, pool.shape[0] - 1)]
+        active = active & (child >= 0)
+        node = jnp.maximum(child, 0)
+    # --- leaf layer: store offsets ---
+    i = spec.layers - 1
+    pool = pools[i]
+    slot = _child_slots(spec, i, node, keys)
+    tgt = jnp.where(active, slot, pool.shape[0])
+    pools[i] = pool.at[tgt].set(offsets, mode="drop")
+    return SortState(tuple(pools), counts, overflow)
+
+
+def delete_keys(spec: SortSpec, state: SortState, keys: jnp.ndarray,
+                mask: jnp.ndarray):
+    """Clear leaf slots for present keys. Returns (state, offsets, found)."""
+    B = keys.shape[0]
+    node = jnp.zeros((B,), jnp.int32)
+    valid = mask
+    slot = jnp.zeros((B,), jnp.int32)
+    for i in range(spec.layers):
+        slot = _child_slots(spec, i, node, keys)
+        child = state.pools[i][jnp.clip(slot, 0, state.pools[i].shape[0] - 1)]
+        child = jnp.where(valid, child, -1)
+        valid = child >= 0
+        if i < spec.layers - 1:
+            node = jnp.maximum(child, 0)
+        else:
+            offsets = child
+    leaf = state.pools[-1]
+    tgt = jnp.where(valid, slot, leaf.shape[0])
+    leaf = leaf.at[tgt].set(-1, mode="drop")
+    pools = state.pools[:-1] + (leaf,)
+    return SortState(pools, state.counts, state.overflow), offsets, valid
+
+
+def materialized_slots(spec: SortSpec, state: SortState) -> jnp.ndarray:
+    """Pointer slots actually materialized (the paper's space metric):
+    sum_i counts[i] * 2^{a_i}."""
+    fans = jnp.asarray([1 << a for a in spec.fanout_bits], jnp.int32)
+    return jnp.sum(state.counts * fans)

@@ -1,0 +1,145 @@
+"""Vertex table (paper §3.1, Fig. 3a) — struct-of-arrays, functional.
+
+Each row is a vertex block: ID, Del_time, Deg, Size, Cap and the edge-array
+location. The paper's ``EdgeArr*`` pointer becomes ``start_block`` — the
+first block of the vertex's contiguous extent in the global edge pool.
+
+Deleted offsets go to a free ring (the paper's reuse queue); reuse pops via
+vectorized indexing — the batched analogue of the paper's CAS pops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sort as sort_mod
+from .sort import SortSpec, SortState
+
+__all__ = ["VertexTable", "make_vertex_table", "ensure_vertices",
+           "delete_vertices", "num_active"]
+
+
+class VertexTable(NamedTuple):
+    ids: jnp.ndarray          # uint32[n_cap, 2] — the vertex ID (hi, lo)
+    del_time: jnp.ndarray     # int32[n_cap]: -1 unallocated, 0 active, t>0 deleted@t
+    deg: jnp.ndarray          # int32[n_cap] — live degree (as of last compaction)
+    size: jnp.ndarray         # int32[n_cap] — occupied entries in edge array
+    cap: jnp.ndarray          # int32[n_cap] — edge-array capacity (entries)
+    start_block: jnp.ndarray  # int32[n_cap] — extent start block, -1 = none
+    num_rows: jnp.ndarray     # int32 scalar — bump high-water mark
+    free_q: jnp.ndarray       # int32[n_cap] ring of reusable offsets
+    free_head: jnp.ndarray    # int32 scalar (monotonic)
+    free_tail: jnp.ndarray    # int32 scalar (monotonic)
+    overflow: jnp.ndarray     # int32 scalar — table-full events
+
+
+def make_vertex_table(n_cap: int) -> VertexTable:
+    z = jnp.zeros((), jnp.int32)
+    return VertexTable(
+        ids=jnp.zeros((n_cap, 2), jnp.uint32),
+        del_time=jnp.full((n_cap,), -1, jnp.int32),
+        deg=jnp.zeros((n_cap,), jnp.int32),
+        size=jnp.zeros((n_cap,), jnp.int32),
+        cap=jnp.zeros((n_cap,), jnp.int32),
+        start_block=jnp.full((n_cap,), -1, jnp.int32),
+        num_rows=z,
+        free_q=jnp.zeros((n_cap,), jnp.int32),
+        free_head=z,
+        free_tail=z,
+        overflow=z,
+    )
+
+
+def num_active(vt: VertexTable) -> jnp.ndarray:
+    return jnp.sum((vt.del_time == 0).astype(jnp.int32))
+
+
+def ensure_vertices(spec: SortSpec, st: SortState, vt: VertexTable,
+                    keys: jnp.ndarray, mask: jnp.ndarray):
+    """Locate-or-insert a batch of vertex IDs.
+
+    Returns (sort_state, vertex_table, offsets[B], created[B]). Duplicate IDs
+    within the batch resolve to one shared new offset. Offsets are -1 only on
+    table overflow (also counted in vt.overflow).
+    """
+    B = keys.shape[0]
+    n_cap = vt.del_time.shape[0]
+    off = sort_mod.lookup(spec, st, keys)
+    missing = (off < 0) & mask
+
+    # ---- intra-batch dedup of missing keys (lexicographic sort) ----
+    SENT = jnp.uint32(0xFFFFFFFF)
+    k_hi = jnp.where(missing, keys[:, 0], SENT)
+    k_lo = jnp.where(missing, keys[:, 1], SENT)
+    order = jnp.lexsort((k_lo, k_hi))
+    sh, sl = k_hi[order], k_lo[order]
+    m_sorted = missing[order]
+    prev_h = jnp.concatenate([SENT[None], sh[:-1]])
+    prev_l = jnp.concatenate([SENT[None], sl[:-1]])
+    first = ((sh != prev_h) | (sl != prev_l)) & m_sorted
+    group = jnp.cumsum(first.astype(jnp.int32)) - 1          # group id (sorted order)
+    n_new = jnp.sum(first.astype(jnp.int32))
+
+    # ---- allocate offsets for group representatives ----
+    avail = vt.free_tail - vt.free_head
+    j = jnp.arange(B, dtype=jnp.int32)                        # representative rank
+    from_queue = j < avail
+    q_idx = (vt.free_head + j) % n_cap
+    reused = vt.free_q[q_idx]
+    bumped = vt.num_rows + (j - jnp.minimum(avail, n_new))
+    alloc = jnp.where(from_queue, reused, bumped)             # offset for rank j
+    fits = alloc < n_cap
+    alloc = jnp.where(fits, alloc, -1)
+    n_over = jnp.sum(((j < n_new) & ~fits).astype(jnp.int32))
+
+    # representative rank of each sorted element = group id
+    off_sorted = jnp.where(m_sorted, alloc[jnp.clip(group, 0, B - 1)], -1)
+    # scatter back to original order
+    new_off = jnp.zeros((B,), jnp.int32).at[order].set(off_sorted)
+    offsets = jnp.where(missing, new_off, off)
+    created = missing & (offsets >= 0)
+
+    # ---- update allocator cursors ----
+    used_from_q = jnp.minimum(avail, n_new)
+    bump_used = jnp.maximum(n_new - avail, 0) - n_over
+    vt = vt._replace(
+        free_head=vt.free_head + used_from_q,
+        num_rows=vt.num_rows + jnp.maximum(bump_used, 0),
+        overflow=vt.overflow + n_over,
+    )
+
+    # ---- initialize new rows (one scatter per field; dup groups share off,
+    #      identical values so scatter order is immaterial) ----
+    tgt = jnp.where(created, offsets, n_cap)
+    vt = vt._replace(
+        ids=vt.ids.at[tgt].set(keys, mode="drop"),
+        del_time=vt.del_time.at[tgt].set(0, mode="drop"),
+        deg=vt.deg.at[tgt].set(0, mode="drop"),
+        size=vt.size.at[tgt].set(0, mode="drop"),
+        cap=vt.cap.at[tgt].set(0, mode="drop"),
+        start_block=vt.start_block.at[tgt].set(-1, mode="drop"),
+    )
+    st = sort_mod.insert_mappings(spec, st, keys, offsets, created)
+    return st, vt, offsets, created
+
+
+def delete_vertices(spec: SortSpec, st: SortState, vt: VertexTable,
+                    keys: jnp.ndarray, mask: jnp.ndarray, ts: jnp.ndarray):
+    """Mark vertices deleted at timestamp ``ts``.
+
+    The SORT leaf slot is cleared (the ID resolves to absent afterwards).
+    The offset is recycled into the free ring only at the next pool
+    defragmentation — the epoch-based analogue of the paper's "deleted
+    vertices are only purged from the queue when all transactions before
+    Del_time are finished": stale edge references to the offset are filtered
+    by the del_time check until defrag drops them, so a recycled offset can
+    never resurrect old edges. Returns (st, vt, offsets, found)."""
+    n_cap = vt.del_time.shape[0]
+    st, offsets, found = sort_mod.delete_keys(spec, st, keys, mask)
+    # only delete rows that are currently active
+    row_ok = found & (vt.del_time[jnp.clip(offsets, 0, n_cap - 1)] == 0)
+    tgt = jnp.where(row_ok, offsets, n_cap)
+    vt = vt._replace(del_time=vt.del_time.at[tgt].set(ts, mode="drop"))
+    return st, vt, offsets, row_ok

@@ -1,0 +1,4 @@
+from .pipeline import (TokenStream, GraphWalkStream, Prefetcher,
+                       shard_batch)
+
+__all__ = ["TokenStream", "GraphWalkStream", "Prefetcher", "shard_batch"]

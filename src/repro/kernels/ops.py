@@ -1,0 +1,50 @@
+"""Jit'd public wrappers around the Pallas kernels with ref fallbacks.
+
+On this container (CPU) the Pallas TPU kernels execute in interpret mode;
+``impl='auto'`` picks interpret-Pallas only when explicitly requested so unit
+economics on CPU stay sane. On a real TPU build, 'pallas' is the default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+_DEFAULT_IMPL = "ref"  # flipped to "pallas" on TPU backends at import time
+try:  # pragma: no cover - depends on runtime platform
+    if jax.default_backend() == "tpu":
+        _DEFAULT_IMPL = "pallas"
+except Exception:  # pragma: no cover
+    pass
+
+
+def compact_rows(dst, w, ts, size, read_ts=None, impl: str = "auto"):
+    """Batched log compaction (paper Alg. 2). See ref.compact_rows_ref."""
+    impl = _DEFAULT_IMPL if impl == "auto" else impl
+    if impl == "pallas":
+        from .compact import compact_rows_pallas
+        return compact_rows_pallas(dst, w, ts, size, read_ts=read_ts)
+    return _ref.compact_rows_ref(dst, w, ts, size, read_ts=read_ts)
+
+
+def sort_lookup(pools, counts, keys, *, fanout_bits, bit_offsets,
+                impl: str = "auto"):
+    impl = _DEFAULT_IMPL if impl == "auto" else impl
+    if impl == "pallas":
+        from .sort_lookup import sort_lookup_pallas
+        return sort_lookup_pallas(pools, counts, keys, fanout_bits=fanout_bits,
+                                  bit_offsets=bit_offsets)
+    return _ref.sort_lookup_ref(pools, counts, keys, fanout_bits=fanout_bits,
+                                bit_offsets=bit_offsets)
+
+
+def frontier_expand(owner, dst, valid, frontier_bits, visited_bits,
+                    impl: str = "auto"):
+    impl = _DEFAULT_IMPL if impl == "auto" else impl
+    if impl == "pallas":
+        from .frontier import frontier_pallas
+        return frontier_pallas(owner, dst, valid, frontier_bits, visited_bits)
+    return _ref.frontier_ref(owner, dst, valid, frontier_bits, visited_bits)

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernels must match them bit-exactly
+(integer outputs) / allclose (float outputs) across the test sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compact_rows_ref", "sort_lookup_ref", "frontier_ref"]
+
+
+def compact_rows_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,
+                     size: jnp.ndarray, read_ts: jnp.ndarray | None = None):
+    """Log compaction (paper Algorithm 2) on a batch of edge arrays.
+
+    Inputs are (K, D): destination offsets (-1 = empty slot), weights
+    (0 = NULL/tombstone), timestamps; ``size`` (K,) is the occupied prefix.
+    Semantics = the paper's reverse scan with a duplicate-checker bitmap:
+    for each destination the entry at the highest occupied position wins;
+    tombstones drop the edge. Survivors are emitted in reverse-scan order
+    (descending position). ``read_ts`` optionally restricts to entries with
+    ts <= read_ts (MVCC time-travel reads).
+
+    Returns (dst', w', ts', count) with compacted rows front-packed and empty
+    slots set to (-1, 0, 0).
+    """
+    K, D = dst.shape
+    pos = jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), (K, D))
+    valid = (pos < size[:, None]) & (dst >= 0)
+    if read_ts is not None:
+        valid = valid & (ts <= jnp.asarray(read_ts, ts.dtype))
+
+    BIGD = jnp.int32(2 ** 30)
+    dkey = jnp.where(valid, dst, BIGD)  # invalid entries sort to the end
+    # lexicographic per-row sort by (dst asc, pos asc):
+    o1 = jnp.argsort(pos, axis=-1, stable=True)  # identity, keeps shape logic clear
+    o2 = jnp.argsort(jnp.take_along_axis(dkey, o1, -1), axis=-1, stable=True)
+    order = jnp.take_along_axis(o1, o2, -1)
+    ds = jnp.take_along_axis(dkey, order, -1)
+    ps = jnp.take_along_axis(pos, order, -1)
+    ws = jnp.take_along_axis(w, order, -1)
+    tss = jnp.take_along_axis(ts, order, -1)
+
+    nxt = jnp.concatenate([ds[:, 1:], jnp.full((K, 1), -2, ds.dtype)], axis=-1)
+    is_last = (ds != nxt) & (ds < BIGD)           # max position per dst
+    keep = is_last & (ws != 0)
+
+    # emit survivors by descending original position (reverse-scan order)
+    emit_key = jnp.where(keep, D - ps, BIGD)
+    o3 = jnp.argsort(emit_key, axis=-1, stable=True)
+    dso = jnp.take_along_axis(jnp.where(keep, ds, -1), o3, -1)
+    wso = jnp.take_along_axis(jnp.where(keep, ws, 0.0), o3, -1)
+    tso = jnp.take_along_axis(jnp.where(keep, tss, 0), o3, -1)
+    count = jnp.sum(keep.astype(jnp.int32), axis=-1)
+    return dso, wso, tso, count
+
+
+def sort_lookup_ref(pools, counts, keys: jnp.ndarray, *, fanout_bits,
+                    bit_offsets) -> jnp.ndarray:
+    """SORT descent oracle: (B, 2) uint32 keys -> int32 offsets (-1 absent).
+
+    ``pools`` is the tuple of per-layer flat node pools; fanout_bits /
+    bit_offsets are the static layer structure.
+    """
+    from repro.core.keys import extract_bits
+
+    B = keys.shape[0]
+    node = jnp.zeros((B,), jnp.int32)
+    valid = jnp.ones((B,), bool)
+    for i, (a, boff) in enumerate(zip(fanout_bits, bit_offsets)):
+        idx = extract_bits(keys, boff, a)
+        slot = node * (1 << a) + idx
+        child = pools[i][jnp.clip(slot, 0, pools[i].shape[0] - 1)]
+        child = jnp.where(valid, child, -1)
+        valid = child >= 0
+        node = jnp.maximum(child, 0)
+    return jnp.where(valid, node, -1)
+
+
+def frontier_ref(owner: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+                 frontier_bits: jnp.ndarray, visited_bits: jnp.ndarray):
+    """BFS frontier expansion oracle.
+
+    owner: (NB,) vertex offset per pool block (-1 unused)
+    dst:   (NB, BS) destination offsets
+    valid: (NB, BS) liveness mask of each entry
+    frontier_bits / visited_bits: (W,) uint32 bitmaps over vertex offsets.
+
+    Returns next_bits (W,) uint32: destinations of live edges whose owner is
+    in the frontier, minus already-visited vertices.
+    """
+    W = frontier_bits.shape[0]
+    own_ok = (owner >= 0)
+    fw = frontier_bits[jnp.clip(owner, 0, W * 32 - 1) // 32]
+    fbit = (fw >> (jnp.clip(owner, 0, W * 32 - 1) % 32).astype(jnp.uint32)) & 1
+    on_frontier = own_ok & (fbit == 1)
+    m = valid & on_frontier[:, None] & (dst >= 0)
+    d = jnp.where(m, dst, 0)
+    word = d // 32
+    bit = jnp.left_shift(jnp.uint32(1), (d % 32).astype(jnp.uint32))
+    # scatter-OR: two entries may target different bits of one word, so a
+    # plain scatter-max of bit values is lossy. Build the OR per bit plane
+    # (32 scatter-max passes — fine for an oracle).
+    flat_word = word.reshape(-1)
+    flat_bit = jnp.where(m.reshape(-1), bit.reshape(-1), jnp.uint32(0))
+    next_bits = jnp.zeros((W,), jnp.uint32)
+    for b in range(32):
+        has = (flat_bit >> jnp.uint32(b)) & jnp.uint32(1)
+        hit = jnp.zeros((W,), jnp.uint32).at[flat_word].max(has)
+        next_bits = next_bits | (hit << jnp.uint32(b))
+    next_bits = next_bits & ~visited_bits
+    return next_bits

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell on placeholder devices; capture memory/cost/collective statistics for
+the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells x 2 meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch
+from repro.dist.sharding import (TRAIN_RULES, SERVE_RULES, MOE_SERVE_RULES,
+                                 ShardingRules, param_partition_specs,
+                                 set_rules, spec_for)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import (build_model, cache_specs, input_specs,
+                              param_counts, shapes_and_logical)
+from repro.train import adamw, adafactor, cosine_schedule, make_train_step
+from repro.train.step import TrainState
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+from repro.launch.hlo import parse_collectives
+
+
+def _opt_state_specs(opt_state_shapes, params_shapes, pspecs):
+    """Optimizer-state PartitionSpecs: moments inherit the param spec;
+    adafactor's factored vr/vc drop the last / second-to-last dim."""
+    pflat, ptree = jax.tree.flatten(params_shapes)
+    specflat = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    by_shape = {}
+
+    def leaf_spec(leaf):
+        # match a param leaf by shape identity (moments); factored stats match
+        # a param whose shape starts with leaf.shape
+        for p, s in zip(pflat, specflat):
+            if p.shape == leaf.shape:
+                return s
+        for p, s in zip(pflat, specflat):
+            if len(p.shape) == len(leaf.shape) + 1:
+                if p.shape[:-1] == leaf.shape:       # vr: drop last
+                    return P(*tuple(s)[:-1])
+                if p.shape[:-2] + p.shape[-1:] == leaf.shape:  # vc
+                    return P(*(tuple(s)[:-2] + tuple(s)[-1:]))
+        return P()
+
+    return jax.tree.map(leaf_spec, opt_state_shapes)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
+             variant: str = "baseline"):
+    from repro.dist.sharding import VARIANTS, ShardingRules
+    import dataclasses
+    rule_over, cfg_over = VARIANTS[variant]
+    mod = get_arch(arch)
+    skip = getattr(mod, "SKIPS", {}).get(shape)
+    mesh_name = ("multi" if multi_pod else "single") + \
+        ("" if variant == "baseline" else f"+{variant}")
+    if skip:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skip", "reason": skip}
+        _save(rec)
+        print(f"[SKIP] {arch} x {shape}: {skip}")
+        return rec
+
+    cfg = dataclasses.replace(mod.CONFIG, **cfg_over)
+    kind, seq, batch = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    pshapes, logical = shapes_and_logical(cfg)
+
+    big_moe = cfg.family == "moe"
+    if kind == "train":
+        rules = TRAIN_RULES
+    elif big_moe:
+        rules = MOE_SERVE_RULES
+    else:
+        rules = SERVE_RULES
+    rules = ShardingRules({**rules, **rule_over})
+
+    pspecs = param_partition_specs(pshapes, logical, rules, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    repl = NamedSharding(mesh, P())
+
+    specs = input_specs(cfg, kind, seq, batch)
+
+    def in_sh(name, s):
+        if name in ("tokens", "labels"):
+            return NamedSharding(mesh, spec_for(
+                s.shape, ("batch", None), rules, mesh))
+        if name == "positions":
+            lg = (None, "batch", None) if len(s.shape) == 3 else ("batch", None)
+            return NamedSharding(mesh, spec_for(s.shape, lg, rules, mesh))
+        if name == "frames":
+            return NamedSharding(mesh, spec_for(
+                s.shape, ("batch", "act_seq", None), rules, mesh))
+        if name in ("token", "pos"):
+            return NamedSharding(mesh, spec_for(s.shape, ("batch",), rules,
+                                                mesh))
+        if name == "enc_out":
+            return NamedSharding(mesh, spec_for(
+                s.shape, ("batch", None, None), rules, mesh))
+        return repl
+    batch_sh = {k: in_sh(k, v) for k, v in specs.items()}
+
+    t0 = time.time()
+    with set_rules(rules, mesh):
+        if kind == "train":
+            opt = adafactor(cosine_schedule(1e-4, 100, 10000)) if big_moe \
+                else adamw(cosine_schedule(3e-4, 100, 10000))
+            step_fn = make_train_step(model, opt)
+            ost = jax.eval_shape(opt.init, pshapes)
+            osp = _opt_state_specs(ost, pshapes, pspecs)
+            osh = jax.tree.map(lambda s: NamedSharding(mesh, s), osp,
+                               is_leaf=lambda x: isinstance(x, P))
+            state_struct = TrainState(params=pshapes, opt_state=ost,
+                                      step=jax.ShapeDtypeStruct((), jnp.int32))
+            state_sh = TrainState(params=psh, opt_state=osh, step=repl)
+            out_sh = (state_sh, {"loss": repl, "grad_norm": repl,
+                                 "step": repl})
+            fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=out_sh, donate_argnums=(0,))
+            lowered = fn.lower(state_struct, specs)
+        else:
+            cspec = cache_specs(cfg, batch, seq)
+
+            def cache_logical(leaf):
+                n = len(leaf.shape)
+                if n >= 4:  # kv caches (L, B, S, H, d) / (G, A, B, S, H, d)
+                    lg = [None] * n
+                    lg[-4] = "batch"
+                    lg[-3] = "cache_seq"
+                    lg[-2] = "kv_heads"
+                    return P(*spec_for(leaf.shape, lg, rules, mesh))
+                if n >= 2:
+                    lg = [None] * n
+                    lg[1 if n > 2 else 0] = "batch" if n <= 3 else None
+                    return spec_for(leaf.shape, [None] * n, rules, mesh)
+                return P()
+
+            cspecs_p = jax.tree.map(cache_logical, cspec)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs_p,
+                               is_leaf=lambda x: isinstance(x, P))
+            if kind == "prefill":
+                fn = jax.jit(model.prefill,
+                             in_shardings=(psh, batch_sh, csh),
+                             out_shardings=(NamedSharding(mesh, spec_for(
+                                 (batch, cfg.vocab), ("batch", "vocab"),
+                                 rules, mesh)), csh),
+                             donate_argnums=(2,))
+            else:
+                fn = jax.jit(model.decode,
+                             in_shardings=(psh, batch_sh, csh),
+                             out_shardings=(NamedSharding(mesh, spec_for(
+                                 (batch, cfg.vocab), ("batch", "vocab"),
+                                 rules, mesh)), csh),
+                             donate_argnums=(2,))
+            lowered = fn.lower(pshapes, specs, cspec)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cbytes, ccounts = parse_collectives(compiled.as_text())
+    tot, act = param_counts(cfg)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "variant": variant,
+        "kind": kind, "seq": seq, "batch": batch, "chips": chips,
+        "params_total": int(tot), "params_active": int(act),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", 0.0)) if cost else None,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else None,
+        "memory": {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes",
+                    "generated_code_size_in_bytes")
+                   if mem is not None and hasattr(mem, k)},
+        "collective_bytes": cbytes, "collective_counts": ccounts,
+    }
+    if save:
+        _save(rec)
+    mm = rec["memory"].get("argument_size_in_bytes", 0) + \
+        rec["memory"].get("temp_size_in_bytes", 0)
+    print(f"[OK] {arch} x {shape} x {mesh_name}: compile {t_compile:.0f}s, "
+          f"flops/dev {rec['flops']:.3g}, args+temp/dev {mm/2**30:.2f} GiB, "
+          f"coll {sum(cbytes.values())/2**20:.1f} MiB")
+    return rec
+
+
+def _save(rec):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    p.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                run_cell(a, s, mp, variant=args.variant)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                failures.append((a, s, mp, str(e)[:200]))
+                _save({"arch": a, "shape": s,
+                       "mesh": "multi" if mp else "single",
+                       "status": "fail", "error": str(e)[:500]})
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nAll dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

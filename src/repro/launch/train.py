@@ -1,0 +1,141 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On-cluster it runs the full config on the production mesh; with --smoke it
+runs the reduced config on the local device(s). Features: sharded params
+(planner), microbatch accumulation, checkpoint/restart (atomic + async +
+SIGTERM hook), deterministic data resume, straggler watchdog, graph-walk
+data source (--data graph) fed by a live RadixGraph.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.configs import get_arch
+from repro.data import GraphWalkStream, Prefetcher, TokenStream, shard_batch
+from repro.dist.sharding import TRAIN_RULES, param_partition_specs, set_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.api import build_model, shapes_and_logical
+from repro.train import adamw, adafactor, cosine_schedule, init_train_state, \
+    make_train_step
+from repro.train.step import TrainState
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule-total", type=int, default=None,
+                    help="cosine schedule horizon (default: --steps)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", choices=("synthetic", "graph"),
+                    default="synthetic")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--step-timeout", type=float, default=300.0,
+                    help="straggler watchdog: warn if a step exceeds this")
+    args = ap.parse_args(argv)
+
+    mod = get_arch(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    model = build_model(cfg)
+    mesh = make_production_mesh() if args.production_mesh else \
+        make_local_mesh()
+    rules = TRAIN_RULES
+
+    horizon = args.schedule_total or max(args.steps, 21)
+    opt = adamw(cosine_schedule(args.lr, 20, horizon))
+    if cfg.family == "moe" and not args.smoke:
+        opt = adafactor(cosine_schedule(args.lr, 20, horizon))
+    step_fn = make_train_step(model, opt, accum=args.accum)
+
+    pshapes, logical = shapes_and_logical(cfg)
+    pspecs = param_partition_specs(pshapes, logical, rules, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    with set_rules(rules, mesh):
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        state = TrainState(
+            params=jax.tree.map(jax.device_put, state.params, psh),
+            opt_state=state.opt_state, step=state.step)
+        train_step = jax.jit(step_fn, donate_argnums=(0,))
+
+        # ---- data ----
+        if args.data == "graph":
+            from repro.core.radixgraph import RadixGraph
+            g = RadixGraph(n_max=4096, expected_n=2048, batch=1024,
+                           pool_blocks=8192, undirected=True)
+            rng = np.random.default_rng(0)
+            ids = rng.choice(2**31, 2048, replace=False).astype(np.uint64)
+            g.add_edges(rng.choice(ids, 16384), rng.choice(ids, 16384))
+            stream = GraphWalkStream(g, cfg.vocab, args.batch, args.seq)
+        else:
+            stream = TokenStream(cfg.vocab, args.batch, args.seq)
+
+        # ---- restore ----
+        start = 0
+        ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        if ckpt and latest_step(args.ckpt_dir) is not None:
+            tree, start, meta = restore_checkpoint(args.ckpt_dir, state)
+            state = tree
+            stream.restore(meta["stream"])
+            print(f"[train] restored step {start}")
+        if ckpt:
+            ckpt.install_sigterm_hook(lambda: (state, int(state.step)))
+
+        if start >= args.steps:
+            print(f"[train] checkpoint step {start} >= --steps {args.steps}; "
+                  "nothing to do")
+            return []
+        it = Prefetcher(stream, depth=2)
+        losses = []
+        for i in range(start, args.steps):
+            batch = next(it)
+            if args.accum > 1:
+                batch = {k: v.reshape((args.accum, v.shape[0] // args.accum)
+                                      + v.shape[1:])
+                         for k, v in batch.items()}
+            batch = shard_batch(batch, mesh)
+            t0 = time.time()
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if dt > args.step_timeout:
+                print(f"[watchdog] step {i} took {dt:.1f}s "
+                      f"(> {args.step_timeout}s) — straggler suspected")
+            losses.append(loss)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            if ckpt and (i + 1) % args.ckpt_every == 0:
+                ckpt.save_async(state, i + 1,
+                                {"stream": stream.state_for(i + 1)})
+        if ckpt:
+            ckpt.wait()
+            save_checkpoint(args.ckpt_dir, state, args.steps,
+                            {"stream": stream.state_for(args.steps)})
+        it.close()
+        print(f"[train] done. loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .api import build_model, Model
+
+__all__ = ["ModelConfig", "build_model", "Model"]

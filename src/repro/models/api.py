@@ -1,0 +1,204 @@
+"""Public model API: build_model(cfg) -> Model (init / train_loss / prefill /
+decode / init_cache / input_specs) + exact parameter accounting.
+
+Shape-cell semantics (assignment):
+  train_*   -> train_step lowering (loss + grads happen in repro.train)
+  prefill_* -> prefill(params, tokens, cache): full forward, builds cache,
+               returns last-position logits
+  decode_*  -> decode(params, token, cache, pos): ONE new token against a
+               KV/state cache of seq_len
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import lm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable          # key -> params
+    logical_specs: Any      # pytree of logical axis tuples (parallel to params)
+    train_loss: Callable    # (params, batch) -> scalar loss
+    prefill: Callable       # (params, batch, cache) -> (logits, cache)
+    decode: Callable        # (params, batch, cache) -> (logits, cache)
+    init_cache: Callable    # (batch, smax) -> cache pytree
+
+
+def _cache_struct(cfg: ModelConfig, B: int, smax: int):
+    dt = cfg.cdt
+    hd, Hkv = cfg.hd, cfg.kv_heads
+    Lc = cfg.layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        s = smax if cfg.window is None else min(smax, cfg.window)
+        return (jnp.zeros((Lc, B, s, Hkv, hd), dt),
+                jnp.zeros((Lc, B, s, Hkv, hd), dt),
+                jnp.zeros((Lc, B), jnp.int32))
+    if cfg.family == "ssm":
+        din = cfg.ssm_expand * cfg.d_model
+        H = cfg.ssm_heads or (din // cfg.ssm_head_dim)
+        P = din // H
+        conv_dim = din + 2 * cfg.ssm_state
+        from .ssm import SSMCache
+        return SSMCache(
+            h=jnp.zeros((Lc, B, H, P, cfg.ssm_state), jnp.float32),
+            conv=jnp.zeros((Lc, B, cfg.conv_width - 1, conv_dim), dt))
+    if cfg.family == "hybrid":
+        unit = len(cfg.pattern)
+        G = cfg.layers // unit
+        R = sum(1 for t in cfg.pattern if t == "rec")
+        A = unit - R
+        rest = cfg.layers - G * unit
+        Dr = cfg.lru_width or cfg.d_model
+        W = min(smax, cfg.window or smax)
+        g = ((jnp.zeros((G, R, B, Dr), jnp.float32),
+              jnp.zeros((G, R, B, cfg.conv_width - 1, Dr), dt)),
+             (jnp.zeros((G, A, B, W, Hkv, hd), dt),
+              jnp.zeros((G, A, B, W, Hkv, hd), dt),
+              jnp.zeros((G, A, B), jnp.int32)))
+        t = None
+        if rest:
+            t = (jnp.zeros((rest, B, Dr), jnp.float32),
+                 jnp.zeros((rest, B, cfg.conv_width - 1, Dr), dt))
+        return (g, t)
+    if cfg.family == "encdec":
+        Ld = cfg.dec_layers
+        return (jnp.zeros((Ld, B, smax, Hkv, hd), dt),
+                jnp.zeros((Ld, B, smax, Hkv, hd), dt),
+                jnp.zeros((Ld, B), jnp.int32))
+    raise ValueError(cfg.family)
+
+
+def shapes_and_logical(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical spec tree) without allocating."""
+    box = {}
+
+    def f(k):
+        p, s = lm.init_params(cfg, k)
+        box["specs"] = s      # plain-Python side channel; runs once at trace
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key):
+        params, _ = lm.init_params(cfg, key)
+        return params
+
+    _, logical = shapes_and_logical(cfg)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = lm.make_positions(cfg, tokens)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = lm.encode(cfg, params, batch["frames"])
+        h, _, aux = lm.forward(cfg, params, tokens, pos, "train",
+                               enc_out=enc_out)
+        loss = lm.xent_chunked(cfg, params, h, labels)
+        return loss + 0.01 * aux
+
+    def prefill(params, batch, cache):
+        tokens = batch["tokens"]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = lm.make_positions(cfg, tokens)
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = lm.encode(cfg, params, batch["frames"])
+        h, cache, _ = lm.forward(cfg, params, tokens, pos, "prefill",
+                                 cache=cache, enc_out=enc_out)
+        logits = lm._unembed(cfg, params, h[:, -1:])[:, 0]
+        return logits, cache
+
+    def decode(params, batch, cache):
+        token = batch["token"]            # (B,)
+        pos = batch["pos"]                # (B,) absolute position
+        tokens = token[:, None]
+        if cfg.pos == "mrope":
+            p3 = batch.get("positions")
+            posx = p3 if p3 is not None else jnp.stack([pos[:, None]] * 3)
+        else:
+            posx = pos[:, None]
+        enc_out = batch.get("enc_out")
+        h, cache, _ = lm.forward(cfg, params, tokens, posx, "decode",
+                                 cache=cache, enc_out=enc_out)
+        logits = lm._unembed(cfg, params, h[:, -1:])[:, 0]
+        return logits, cache
+
+    return Model(cfg=cfg, init=init, logical_specs=logical,
+                 train_loss=train_loss, prefill=prefill, decode=decode,
+                 init_cache=functools.partial(_cache_struct, cfg))
+
+
+# ---------------------------------------------------------------------------
+# accounting & input specs
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts from real init shapes."""
+    shapes, _ = shapes_and_logical(cfg)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        if any("we" in getattr(k, "key", "") for k in path):
+            expert += n
+    if cfg.family == "moe" and cfg.n_experts:
+        active = total - expert + expert * cfg.top_k // cfg.n_experts
+    else:
+        active = total
+    return total, active
+
+
+def input_specs(cfg: ModelConfig, kind: str, seq: int, batch: int) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    kind: 'train' | 'prefill' | 'decode'. Frontends are stubs: [audio]
+    supplies precomputed frame embeddings, [vlm] supplies M-RoPE grids.
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+    S, B = seq, batch
+    sd = jax.ShapeDtypeStruct
+    if kind == "train":
+        d = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        if cfg.pos == "mrope":
+            d["positions"] = sd((3, B, S), i32)
+        if cfg.family == "encdec":
+            d["frames"] = sd((B, S, cfg.d_model), cfg.cdt)
+        return d
+    if kind == "prefill":
+        d = {"tokens": sd((B, S), i32)}
+        if cfg.pos == "mrope":
+            d["positions"] = sd((3, B, S), i32)
+        if cfg.family == "encdec":
+            d["frames"] = sd((B, S, cfg.d_model), cfg.cdt)
+        return d
+    if kind == "decode":
+        d = {"token": sd((B,), i32), "pos": sd((B,), i32)}
+        if cfg.pos == "mrope":
+            d["positions"] = sd((3, B, 1), i32)
+        if cfg.family == "encdec":
+            d["enc_out"] = sd((B, min(S, 4096), cfg.d_model), cfg.cdt)
+        return d
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, smax: int):
+    return jax.eval_shape(lambda: _cache_struct(cfg, batch, smax))

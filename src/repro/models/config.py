@@ -1,0 +1,91 @@
+"""Model configuration — covers all 10 assigned architectures."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str                      # config id, e.g. 'qwen2.5-3b'
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    layers: int
+    d_model: int
+    n_heads: int                   # 0 for attention-free
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # attention / position
+    rope_theta: float = 1e6
+    qkv_bias: bool = False
+    pos: str = "rope"              # rope | mrope | none
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    window: Optional[int] = None   # sliding-window size for local attention
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # dispatch: 'dense' (XLA-lowered scatter), 'a2a' (explicit shard_map
+    # all-to-all — the §Perf fix), 'auto' (a2a when a no-FSDP mesh context
+    # is active)
+    moe_impl: str = "auto"
+
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    ssm_expand: int = 2
+
+    # hybrid (recurrentgemma): layer pattern unit, e.g. ('rec','rec','attn')
+    pattern: Tuple[str, ...] = ()
+    lru_width: Optional[int] = None
+
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    dec_layers: int = 0
+
+    # misc
+    act: str = "swiglu"            # swiglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # attention chunking (flash-style scan blocks)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512    # sequence chunking of the xent loss
+    # long-context capability: True iff decode state is sub-quadratic in ctx
+    subquadratic: bool = False
+    # unroll the layer scan (exact XLA cost_analysis for rooflines; scan
+    # keeps HLO compact for the pass/fail dry-run)
+    unroll_layers: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced copy for smoke tests."""
+        from dataclasses import replace
+        return replace(self, **kw)
+
+    # Exact parameter counts come from the initialized shapes — see
+    # ``api.param_counts(cfg)`` (total and MoE-active).

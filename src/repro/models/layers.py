@@ -1,0 +1,251 @@
+"""Shared model layers: norms, RoPE/M-RoPE, chunked flash attention (GQA,
+causal/bidirectional/sliding-window), SwiGLU/GELU FFN, MoE dispatch.
+
+Pure functions over explicit param pytrees. Every init helper also emits a
+*logical sharding spec* pytree (tuples of logical axis names parallel to the
+array dims) consumed by ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers (params + logical specs)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, spec, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * scale, spec
+
+
+def zeros_init(shape, dtype, spec):
+    return jnp.zeros(shape, dtype), spec
+
+
+def split_tree(pairs):
+    """dict of name -> (array, spec)  ->  (params dict, specs dict)."""
+    params = {k: v[0] if isinstance(v, tuple) else split_tree(v)[0]
+              for k, v in pairs.items()}
+    specs = {k: v[1] if isinstance(v, tuple) else split_tree(v)[1]
+             for k, v in pairs.items()}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-6):
+    # stats in f32, products in the compute dtype: keeps every
+    # activation-shaped tensor (and its cotangent) in bf16 so TP collectives
+    # move half the bytes (§Perf: the f32 upcast was being gathered)
+    x32 = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return x * r.astype(x.dtype) * g.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, ..., S) for (t, h, w);
+    frequency planes are partitioned into ``sections`` (halves of Dh/2)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (Dh/2,)
+    sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    plane = jnp.clip(jnp.searchsorted(sec[1:], jnp.arange(hd // 2),
+                                      side="right"), 0, 2)  # (Dh/2,)
+    pos = jnp.moveaxis(positions3.astype(jnp.float32)[plane], 0, -1)
+    ang = pos * inv  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (GQA; causal / bidirectional / sliding window)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    q_offset: int = 0):
+    """Online-softmax attention with double chunking (lax.scan in both axes).
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh) with Hq % Hkv == 0.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    Memory high-water: (B, Hq, q_chunk, kv_chunk) scores — VMEM-tileable.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Skv + kv_chunk - 1) // kv_chunk
+    pad_q = nq * q_chunk - Sq
+    pad_k = nk * kv_chunk - Skv
+    scale = 1.0 / np.sqrt(Dh)
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qs = qp.reshape(B, nq, q_chunk, Hq, Dh).transpose(1, 0, 3, 2, 4)
+    ks = kp.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    # qs: (nq, B, Hq, qc, Dh); ks/vs: (nk, B, Hkv, kc, Dh)
+
+    kv_valid = jnp.arange(nk * kv_chunk) < Skv
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q  # qblk (B, Hq, qc, Dh)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            kg = jnp.repeat(kblk, G, axis=1)  # (B, Hq, kc, Dh)
+            vg = jnp.repeat(vblk, G, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(jnp.float32),
+                           kg.astype(jnp.float32)) * scale
+            mask = kv_valid[ki * kv_chunk + jnp.arange(kv_chunk)][None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vg.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: (nq, B, Hq, qc, Dh) -> (B, Sq, Hq, Dh)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_chunk, Hq, Dh)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """Single-token decode: q (B, 1, Hq, Dh); caches (B, Smax, Hkv, Dh).
+
+    cache_len: (B,) valid prefix length (the new token's position)."""
+    B, _, Hq, Dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] < cache_len[:, None]           # (B, Smax)
+    if window is not None:
+        mask = mask & (pos[None, :] > cache_len[:, None] - window)
+    qh = q[:, 0].reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, capacity-based, sort-free dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x, router_w, w1, w3, w2, *, top_k: int, capacity_factor: float,
+            dtype):
+    """x: (B, S, d); router_w: (d, E); w1/w3: (E, d, f); w2: (E, f, d).
+
+    Sort-based capacity dispatch: tokens pick top-k experts; each expert
+    serves at most C tokens (overflow dropped, standard Switch behaviour).
+    With experts sharded on the EP axis, XLA lowers the dispatch scatter to
+    an all_to_all.
+    """
+    B, S, d = x.shape
+    E = router_w.shape[1]
+    T = B * S
+    xf = x.reshape(T, d)
+    logits = (xf.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    gval, gidx = jax.lax.top_k(logits, top_k)          # (T, k)
+    gates = jax.nn.softmax(gval, axis=-1)
+
+    C = max(1, int(np.ceil(T * top_k / E * capacity_factor)))
+    flat_e = gidx.reshape(-1)                          # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_g = gates.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stt = flat_t[order]
+    sg = flat_g[order]
+    # rank within expert (segmented iota)
+    idx = jnp.arange(T * top_k)
+    first = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(first, idx, 0))
+    rank = idx - seg_start
+    keepm = rank < C
+    slot = jnp.where(keepm, se * C + rank, E * C)
+
+    buf = jnp.zeros((E * C, d), dtype).at[slot].set(xf[stt].astype(dtype),
+                                                    mode="drop")
+    buf = buf.reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1.astype(dtype))) * \
+        jnp.einsum("ecd,edf->ecf", buf, w3.astype(dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, w2.astype(dtype)).reshape(E * C, d)
+
+    gathered = y[jnp.clip(slot, 0, E * C - 1)]
+    contrib = jnp.where(keepm[:, None], gathered * sg[:, None].astype(dtype),
+                        0)
+    out = jnp.zeros((T, d), dtype).at[stt].add(contrib)
+    aux = _load_balance_loss(logits, gidx, E)
+    return out.reshape(B, S, d), aux
+
+
+def _load_balance_loss(logits, gidx, E):
+    probs = jax.nn.softmax(logits, axis=-1)
+    pe = jnp.mean(probs, axis=0)
+    hits = jnp.zeros((E,), jnp.float32).at[gidx.reshape(-1)].add(1.0)
+    fe = hits / jnp.maximum(jnp.sum(hits), 1.0)
+    return E * jnp.sum(pe * fe)

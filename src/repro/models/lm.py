@@ -1,0 +1,565 @@
+"""LM assembly for all families: dense / vlm / moe / ssm / hybrid / encdec.
+
+Design:
+* params are plain dict pytrees; per-layer tensors are stacked on a leading
+  L dim and consumed by ``lax.scan`` (compact HLO at any depth — critical for
+  512-device SPMD compile times);
+* a parallel *logical spec* tree drives the sharding planner;
+* three entry modes share block code: 'train' (no cache), 'prefill'
+  (build cache), 'decode' (one token against the cache);
+* losses are computed with a sequence-chunked cross-entropy so full
+  (B, S, V) logits never materialize.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as SSM
+from . import rglru as RG
+from repro.dist.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense(key, shp, dt, spec, scale=None):
+    return L.dense_init(key, shp, dt, spec, scale)
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_specs) — parallel pytrees."""
+    dt = cfg.pdt
+    d, f, V, hd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.kv_heads
+    ks = jax.random.split(key, 64)
+    kit = iter(ks)
+
+    def attn_block(Lc):
+        p = {
+            "ln1": (jnp.ones((Lc, d), dt), ("layers", "embed")),
+            "wq": _dense(next(kit), (Lc, d, Hq * hd), dt, ("layers", "fsdp", "tp")),
+            "wk": _dense(next(kit), (Lc, d, Hkv * hd), dt, ("layers", "fsdp", "kv_tp")),
+            "wv": _dense(next(kit), (Lc, d, Hkv * hd), dt, ("layers", "fsdp", "kv_tp")),
+            "wo": _dense(next(kit), (Lc, Hq * hd, d), dt, ("layers", "tp", "fsdp")),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = (jnp.zeros((Lc, Hq * hd), dt), ("layers", "tp"))
+            p["bk"] = (jnp.zeros((Lc, Hkv * hd), dt), ("layers", "kv_tp"))
+            p["bv"] = (jnp.zeros((Lc, Hkv * hd), dt), ("layers", "kv_tp"))
+        return p
+
+    def mlp_block(Lc, ff=f):
+        if cfg.act == "swiglu":
+            return {
+                "ln2": (jnp.ones((Lc, d), dt), ("layers", "embed")),
+                "w1": _dense(next(kit), (Lc, d, ff), dt, ("layers", "fsdp", "tp")),
+                "w3": _dense(next(kit), (Lc, d, ff), dt, ("layers", "fsdp", "tp")),
+                "w2": _dense(next(kit), (Lc, ff, d), dt, ("layers", "tp", "fsdp")),
+            }
+        return {
+            "ln2": (jnp.ones((Lc, d), dt), ("layers", "embed")),
+            "w1": _dense(next(kit), (Lc, d, ff), dt, ("layers", "fsdp", "tp")),
+            "w2": _dense(next(kit), (Lc, ff, d), dt, ("layers", "tp", "fsdp")),
+        }
+
+    tree: Dict[str, Any] = {
+        "embed": _dense(next(kit), (V, d), dt, ("vocab", "fsdp"), scale=0.02),
+        "final_ln": (jnp.ones((d,), dt), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = _dense(next(kit), (d, V), dt, ("fsdp", "vocab"))
+
+    Lc = cfg.layers
+    if cfg.family in ("dense", "vlm"):
+        tree["layers"] = {**attn_block(Lc), **mlp_block(Lc)}
+    elif cfg.family == "moe":
+        E = cfg.n_experts
+        tree["layers"] = {
+            **attn_block(Lc),
+            "ln2": (jnp.ones((Lc, d), dt), ("layers", "embed")),
+            "router": _dense(next(kit), (Lc, d, E), jnp.float32,
+                             ("layers", "embed", None)),
+            "we1": _dense(next(kit), (Lc, E, d, f), dt,
+                          ("layers", "experts", "fsdp", "tp")),
+            "we3": _dense(next(kit), (Lc, E, d, f), dt,
+                          ("layers", "experts", "fsdp", "tp")),
+            "we2": _dense(next(kit), (Lc, E, f, d), dt,
+                          ("layers", "experts", "tp", "fsdp")),
+        }
+    elif cfg.family == "ssm":
+        din = cfg.ssm_expand * d
+        N = cfg.ssm_state
+        H = cfg.ssm_heads or (din // cfg.ssm_head_dim)
+        conv_dim = din + 2 * N
+        dproj = 2 * din + 2 * N + H
+        tree["layers"] = {
+            "ln": (jnp.ones((Lc, d), dt), ("layers", "embed")),
+            "in_proj": _dense(next(kit), (Lc, d, dproj), dt,
+                              ("layers", "fsdp", "tp")),
+            "conv_w": _dense(next(kit), (Lc, cfg.conv_width, conv_dim), dt,
+                             ("layers", None, "tp"), scale=0.5),
+            "A_log": (jnp.zeros((Lc, H), jnp.float32), ("layers", "heads")),
+            "D": (jnp.ones((Lc, H), jnp.float32), ("layers", "heads")),
+            "dt_bias": (jnp.zeros((Lc, H), jnp.float32), ("layers", "heads")),
+            "gnorm": (jnp.ones((Lc, din), dt), ("layers", "tp")),
+            "out_proj": _dense(next(kit), (Lc, din, d), dt,
+                               ("layers", "tp", "fsdp")),
+        }
+    elif cfg.family == "hybrid":
+        unit = len(cfg.pattern)
+        groups = cfg.layers // unit
+        rest = cfg.layers - groups * unit
+        Dr = cfg.lru_width or d
+        rec_per_unit = sum(1 for t in cfg.pattern if t == "rec")
+        att_per_unit = unit - rec_per_unit
+
+        def rec_block(n):
+            return {
+                "ln": (jnp.ones((n, d), dt), ("layers", "embed")),
+                "wx": _dense(next(kit), (n, d, Dr), dt, ("layers", "fsdp", "tp")),
+                "wg": _dense(next(kit), (n, d, Dr), dt, ("layers", "fsdp", "tp")),
+                "conv_w": _dense(next(kit), (n, cfg.conv_width, Dr), dt,
+                                 ("layers", None, "tp"), scale=0.5),
+                "wr": _dense(next(kit), (n, Dr, Dr), dt, ("layers", "tp_in", "tp")),
+                "wi": _dense(next(kit), (n, Dr, Dr), dt, ("layers", "tp_in", "tp")),
+                "lam": (jnp.full((n, Dr), 0.5, jnp.float32), ("layers", "tp")),
+                "wo": _dense(next(kit), (n, Dr, d), dt, ("layers", "tp", "fsdp")),
+            }
+
+        tree["groups"] = {
+            "rec": {k: (jnp.reshape(v, (groups, rec_per_unit) + v.shape[1:]),
+                        ("layers", "unit") + s[1:])
+                    for k, (v, s) in rec_block(groups * rec_per_unit).items()},
+            "attn": {k: (jnp.reshape(v, (groups, att_per_unit) + v.shape[1:]),
+                         ("layers", "unit") + s[1:])
+                     for k, (v, s) in attn_block(groups * att_per_unit).items()},
+            "mlp": {k: (jnp.reshape(v, (groups, unit) + v.shape[1:]),
+                        ("layers", "unit") + s[1:])
+                    for k, (v, s) in mlp_block(groups * unit).items()},
+        }
+        if rest:
+            tree["tail"] = {"rec": rec_block(rest),
+                            "mlp": mlp_block(rest)}
+    elif cfg.family == "encdec":
+        tree["enc_layers"] = {**attn_block(cfg.enc_layers),
+                              **mlp_block(cfg.enc_layers)}
+        dec = attn_block(cfg.dec_layers)
+        cross = {f"x{k}": v for k, v in attn_block(cfg.dec_layers).items()}
+        tree["dec_layers"] = {**dec, **cross, **mlp_block(cfg.dec_layers)}
+        tree["enc_final_ln"] = (jnp.ones((d,), dt), ("embed",))
+    else:
+        raise ValueError(cfg.family)
+
+    return L.split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# blocks (shared across modes)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x):
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _pos_embed(cfg, q, k, pos):
+    if cfg.pos == "mrope":
+        q = L.apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos == "rope":
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def attn_apply(cfg, p, x, pos, mode, cache, *, causal=True, window=None):
+    """Returns (y, new_cache). cache = (k, v, cache_len) or None."""
+    B, S = x.shape[:2]
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, p, h)
+    q, k = _pos_embed(cfg, q, k, pos)
+    new_cache = None
+    if mode == "train":
+        o = L.flash_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    elif mode == "prefill":
+        kc, vc, _ = cache
+        if window is not None and kc.shape[1] < S:  # ring cache (local attn)
+            W = kc.shape[1]
+            tail_k, tail_v = k[:, -W:], v[:, -W:]
+            rot = S % W
+            tail_k = jnp.roll(tail_k, rot, axis=1)
+            tail_v = jnp.roll(tail_v, rot, axis=1)
+            kc, vc = tail_k.astype(kc.dtype), tail_v.astype(vc.dtype)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, 0, 0, 0))
+        o = L.flash_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        new_cache = (kc, vc, jnp.full((B,), S, jnp.int32))
+    else:  # decode
+        kc, vc, clen = cache
+        Smax = kc.shape[1]
+        slot = (clen % Smax) if window is not None else clen
+        kc = kc.at[jnp.arange(B), slot].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[jnp.arange(B), slot].set(v[:, 0].astype(vc.dtype))
+        eff_len = jnp.minimum(clen + 1, Smax) if window is not None else clen + 1
+        if window is not None:
+            # ring cache: every slot valid once warm; positions are implicit
+            o = L.decode_attention(q, kc, vc, eff_len, window=None)
+        else:
+            o = L.decode_attention(q, kc, vc, clen + 1, window=None)
+        new_cache = (kc, vc, clen + 1)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+def mlp_apply(cfg, p, x):
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.act == "swiglu":
+        return L.swiglu(h, p["w1"], p["w3"], p["w2"]).astype(x.dtype)
+    return L.gelu_mlp(h, p["w1"], p["w2"]).astype(x.dtype)
+
+
+def moe_apply(cfg, p, x):
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    from repro.dist import sharding as _shr
+    ctx = _shr._ACTIVE[-1] if _shr._ACTIVE else None
+    use_a2a = (cfg.moe_impl == "a2a" or
+               (cfg.moe_impl == "auto" and ctx is not None and
+                ctx.mesh is not None and ctx.rules.get("fsdp") is None and
+                ctx.rules.get("experts")))
+    if use_a2a and ctx is not None and ctx.mesh is not None:
+        from .moe_a2a import moe_ffn_a2a
+        avail = set(ctx.mesh.axis_names)
+        tok = tuple(a for a in _as_tuple(ctx.rules.get("batch")) if a in avail)
+        exp = tuple(a for a in _as_tuple(ctx.rules.get("experts"))
+                    if a in avail)
+        tp = ctx.rules.get("tp")
+        y, aux = moe_ffn_a2a(h, p["router"], p["we1"], p["we3"], p["we2"],
+                             top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             dtype=cfg.cdt, mesh=ctx.mesh, token_axes=tok,
+                             expert_axes=exp,
+                             tp_axis=tp if isinstance(tp, str) else None)
+    else:
+        y, aux = L.moe_ffn(h, p["router"], p["we1"], p["we3"], p["we2"],
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor, dtype=cfg.cdt)
+    return y.astype(x.dtype), aux
+
+
+def _as_tuple(ax):
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def ssm_apply(cfg, p, x, mode, cache):
+    """Mamba2 block. cache = SSMCache or None."""
+    B, S, d = x.shape
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = cfg.ssm_heads or (din // cfg.ssm_head_dim)
+    P_ = din // H
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_cache = None if cache is None else cache.conv
+    conv_out, new_conv = SSM.causal_conv(conv_in, p["conv_w"], conv_cache)
+    xs, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, P_)
+    if mode == "decode":
+        y, h_new = SSM.ssd_decode_step(xh[:, 0], dt[:, 0], A, Bc[:, 0],
+                                       Cc[:, 0], p["D"], cache.h)
+        y = y[:, None]
+        new_cache = SSM.SSMCache(h=h_new, conv=new_conv)
+    else:
+        y, h_final = SSM.ssd_chunked(xh, dt, A, Bc, Cc, p["D"],
+                                     chunk=cfg.ssm_chunk)
+        new_cache = SSM.SSMCache(h=h_final, conv=new_conv) \
+            if mode == "prefill" else None
+    y = y.reshape(B, S, din)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), new_cache
+
+
+def rec_apply(cfg, p, x, mode, cache):
+    """RG-LRU recurrent block. cache = (h, conv) or None."""
+    B, S, d = x.shape
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    u = h @ p["wx"]
+    g = jax.nn.gelu(h @ p["wg"])
+    conv_cache = None if cache is None else cache[1]
+    u, new_conv = SSM.causal_conv(u, p["conv_w"], conv_cache)
+    r = u @ p["wr"]
+    i = u @ p["wi"]
+    if mode == "decode":
+        y, h_new = RG.rglru_step(u[:, 0], r[:, 0], i[:, 0], p["lam"], cache[0])
+        y = y[:, None]
+        new_cache = (h_new, new_conv)
+    else:
+        y, h_last = RG.rglru_scan(u, r, i, p["lam"])
+        new_cache = (h_last, new_conv) if mode == "prefill" else None
+    return ((y * g) @ p["wo"]).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# model application (all modes)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    e = params["embed"][tokens]
+    return constrain(e.astype(cfg.cdt), "batch", "act_seq", None)
+
+
+def _unembed(cfg, params, h):
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+def _layer_scan(cfg, stacked, x, body, cache=None, length=None):
+    """Scan ``body`` over stacked per-layer params (+ optional cache).
+
+    With cfg.unroll_layers the scan is a Python loop (identical math, bigger
+    HLO) — used by the roofline pass because XLA cost_analysis counts a
+    while body only once."""
+    if cfg.unroll_layers:
+        wrapped = jax.checkpoint(body) if cfg.remat else body
+        Lc = jax.tree.leaves(stacked)[0].shape[0]
+        ys = []
+        for i in range(Lc):
+            p = jax.tree.map(lambda a: a[i], stacked)
+            c = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            x, nc = wrapped(p, x, c)
+            ys.append(nc)
+        new_cache = None
+        if ys and ys[0] is not None:
+            new_cache = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        return x, new_cache
+
+    def step(carry, inp):
+        x = carry
+        p, c = inp
+        y, new_c = body(p, x, c)
+        return y, new_c
+
+    wrapped = jax.checkpoint(step) if cfg.remat else step
+    xs = (stacked, cache)
+    x, new_cache = jax.lax.scan(wrapped, x, xs, length=length)
+    return x, new_cache
+
+
+def forward(cfg: ModelConfig, params, tokens, pos, mode: str, cache=None,
+            enc_out=None):
+    """Shared trunk -> final hidden states (B, S, d). Returns (h, new_cache)."""
+    x = _embed(cfg, params, tokens)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(p, xa, c):
+            x, aux_acc = xa
+            a, nc = attn_apply(cfg, p, x, pos, mode, c, causal=True,
+                               window=cfg.window)
+            x = x + a
+            x = constrain(x, "batch", "act_seq", None)
+            if cfg.family == "moe":
+                m, aux = moe_apply(cfg, p, x)
+                aux_acc = aux_acc + aux
+            else:
+                m = mlp_apply(cfg, p, x)
+            x = x + m
+            return (constrain(x, "batch", "act_seq", None), aux_acc), nc
+
+        (x, aux), new_cache = _layer_scan(
+            cfg, params["layers"], (x, jnp.zeros((), jnp.float32)), body,
+            cache)
+        return x, new_cache, aux / max(cfg.layers, 1)
+
+    if cfg.family == "ssm":
+        def body(p, x, c):
+            y, nc = ssm_apply(cfg, p, x, mode, c)
+            return constrain(x + y, "batch", "act_seq", None), nc
+
+        x, new_cache = _layer_scan(cfg, params["layers"], x, body, cache)
+        return x, new_cache, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        unit = len(cfg.pattern)
+        groups = cfg.layers // unit
+        g_cache, t_cache = (cache if cache is not None else (None, None))
+
+        def gbody(p, x, c):
+            mlp_i = 0
+            new_c = []
+            ri, ai = 0, 0
+            for t in cfg.pattern:
+                if t == "rec":
+                    pp = {k: v[ri] for k, v in p["rec"].items()}
+                    cc = None if c is None else (c[0][0][ri], c[0][1][ri])
+                    y, nc = rec_apply(cfg, pp, x, mode, cc)
+                    if nc is not None:
+                        new_c.append(("rec", ri, nc))
+                    ri += 1
+                else:
+                    pp = {k: v[ai] for k, v in p["attn"].items()}
+                    cc = None if c is None else (c[1][0][ai], c[1][1][ai],
+                                                 c[1][2][ai])
+                    y, nc = attn_apply(cfg, pp, x, pos, mode, cc,
+                                       causal=True, window=cfg.window)
+                    if nc is not None:
+                        new_c.append(("attn", ai, nc))
+                    ai += 1
+                x = x + y
+                mp = {k: v[mlp_i] for k, v in p["mlp"].items()}
+                x = x + mlp_apply(cfg, mp, x)
+                x = constrain(x, "batch", "act_seq", None)
+                mlp_i += 1
+            # reassemble cache pytrees
+            if c is None:
+                return x, None
+            rec_h = jnp.stack([nc[2][0] for nc in new_c if nc[0] == "rec"]) \
+                if any(nc[0] == "rec" for nc in new_c) else c[0][0]
+            rec_cv = jnp.stack([nc[2][1] for nc in new_c if nc[0] == "rec"]) \
+                if any(nc[0] == "rec" for nc in new_c) else c[0][1]
+            at_k = jnp.stack([nc[2][0] for nc in new_c if nc[0] == "attn"]) \
+                if any(nc[0] == "attn" for nc in new_c) else c[1][0]
+            at_v = jnp.stack([nc[2][1] for nc in new_c if nc[0] == "attn"]) \
+                if any(nc[0] == "attn" for nc in new_c) else c[1][1]
+            at_l = jnp.stack([nc[2][2] for nc in new_c if nc[0] == "attn"]) \
+                if any(nc[0] == "attn" for nc in new_c) else c[1][2]
+            return x, ((rec_h, rec_cv), (at_k, at_v, at_l))
+
+        x, new_g_cache = _layer_scan(cfg, params["groups"], x, gbody, g_cache)
+
+        new_t_cache = None
+        if "tail" in params:
+            rest = cfg.layers - groups * unit
+            new_t = []
+            for j in range(rest):
+                pp = {k: v[j] for k, v in params["tail"]["rec"].items()}
+                cc = None if t_cache is None else (t_cache[0][j], t_cache[1][j])
+                y, nc = rec_apply(cfg, pp, x, mode, cc)
+                if nc is not None:
+                    new_t.append(nc)
+                x = x + y
+                mp = {k: v[j] for k, v in params["tail"]["mlp"].items()}
+                x = x + mlp_apply(cfg, mp, x)
+            if new_t:
+                new_t_cache = (jnp.stack([t[0] for t in new_t]),
+                               jnp.stack([t[1] for t in new_t]))
+        cache_out = None
+        if mode == "prefill" or (cache is not None):
+            cache_out = (new_g_cache, new_t_cache)
+        return x, cache_out, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "encdec":
+        # tokens = decoder tokens; enc_out = encoder hidden states
+        def dec_body(p, x, c):
+            self_p = {k: p[k] for k in
+                      ("ln1", "wq", "wk", "wv", "wo") if k in p}
+            a, nc = attn_apply(cfg, self_p, x, pos, mode, c, causal=True)
+            x = x + a
+            xp = {k[1:]: p[k] for k in p if k.startswith("x")}
+            ca = _cross_attn(cfg, xp, x, enc_out)
+            x = x + ca
+            x = x + mlp_apply(cfg, p, x)
+            return constrain(x, "batch", "act_seq", None), nc
+
+        x, new_cache = _layer_scan(cfg, params["dec_layers"], x, dec_body,
+                                   cache)
+        return x, new_cache, jnp.zeros((), jnp.float32)
+
+    raise ValueError(cfg.family)
+
+
+def _cross_attn(cfg, p, x, enc_out):
+    B, S = x.shape[:2]
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (enc_out @ p["wk"]).reshape(B, enc_out.shape[1], cfg.kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(B, enc_out.shape[1], cfg.kv_heads, cfg.hd)
+    o = L.flash_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk)
+    return (o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]).astype(x.dtype)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stub frame embeddings (B, S, d)."""
+    x = frames.astype(cfg.cdt)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(p, x, c):
+        a, _ = attn_apply(cfg, p, x, pos, "train", None, causal=False)
+        x = x + a
+        x = x + mlp_apply(cfg, p, x)
+        return constrain(x, "batch", "act_seq", None), None
+
+    x, _ = _layer_scan(cfg, params["enc_layers"], x, body, None)
+    return L.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# losses & serving entry points
+# ---------------------------------------------------------------------------
+
+def xent_chunked(cfg, params, h, labels, chunk: int | None = None):
+    """Sequence-chunked softmax cross-entropy (never materializes full
+    logits). labels: (B, S) int32; -1 = masked."""
+    B, S, d = h.shape
+    chunk = min(chunk or cfg.loss_chunk, S)
+    nc = (S + chunk - 1) // chunk
+    pad = nc * chunk - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hs = hp.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = lp.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp
+        logits = _unembed(cfg, params, hc)          # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((logz - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    step = jax.checkpoint(step) if cfg.remat else step
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_positions(cfg, tokens):
+    B, S = tokens.shape[:2]
+    if cfg.pos == "mrope":
+        p = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return jnp.stack([p, p, p])  # text-only default; VLM feeds real grids
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))

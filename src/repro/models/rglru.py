@@ -1,0 +1,41 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(-c · softplus(Λ) · r_t),  r/i = sigmoid gates.
+
+Training/prefill uses an associative scan (log-depth on TPU); decode is the
+O(1) recurrence. The temporal-conv front and the sliding-window attention
+sibling block live in lm.py's hybrid assembly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+C_FACTOR = 8.0
+
+
+def rglru_scan(x, r, i, lam):
+    """x, r, i: (B, S, D); lam: (D,) raw Λ. Returns (y, final_h)."""
+    a = jnp.exp(-C_FACTOR * jax.nn.softplus(lam)[None, None] *
+                jax.nn.sigmoid(r.astype(jnp.float32)))
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return bb.astype(x.dtype), bb[:, -1].astype(jnp.float32)
+
+
+def rglru_step(x, r, i, lam, h):
+    """One-token step. x, r, i: (B, D); h: (B, D) fp32."""
+    a = jnp.exp(-C_FACTOR * jax.nn.softplus(lam)[None] *
+                jax.nn.sigmoid(r.astype(jnp.float32)))
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32))
+    h = a * h + gated
+    return h.astype(x.dtype), h

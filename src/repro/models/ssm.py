@@ -1,0 +1,105 @@
+"""Mamba2 SSD (state-space duality) block — chunked, MXU-friendly.
+
+Implements the block decomposition of arXiv:2405.21060: within a chunk the
+output is a masked quadratic form (matmuls — maps onto the MXU); across
+chunks a single recurrent state (B_heads, P, N) is passed through a scan.
+Decode is the O(1) recurrence h = decay·h + dt·B⊗x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N) recurrent state
+    conv: jnp.ndarray     # (B, W-1, conv_dim) conv tail
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, chunk: int):
+    """x: (B, S, H, P); dt: (B, S, H) (softplus applied); A: (H,) < 0;
+    B_, C_: (B, S, N); D: (H,). Returns y (B, S, H, P) and final state
+    (B, H, P, N)."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    nc = (S + chunk - 1) // chunk
+    pad = nc * chunk - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+
+    xc = xp.reshape(Bsz, nc, chunk, H, P)
+    dtc = dtp.reshape(Bsz, nc, chunk, H)
+    Bc = Bp.reshape(Bsz, nc, chunk, N)
+    Cc = Cp.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]            # (B, nc, L, H), <= 0
+    cs = jnp.cumsum(dA, axis=2)                  # within-chunk cumulative
+
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for j <= i
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,nc,L,L,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                   Bc.astype(jnp.float32))       # (B,nc,L,L)
+    M = G[..., None] * Lmat                      # (B,nc,L,L,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk states: S_c = sum_j exp(cs_last - cs_j) * dt_j * B_j x_j^T
+    decay_tail = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,L,H)
+    SB = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_tail * dtc, Bc.astype(
+        jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk scan: h_{c} = exp(sum dA_c) * h_{c-1} + S_c
+    chunk_decay = jnp.exp(cs[:, :, -1, :])       # (B,nc,H)
+
+    def scan_fn(h, inp):
+        dcy, s = inp
+        h_new = h * dcy[..., None, None] + s
+        return h_new, h
+
+    dcy_t = jnp.moveaxis(chunk_decay, 1, 0)      # (nc,B,H)
+    s_t = jnp.moveaxis(SB, 1, 0)                 # (nc,B,H,P,N)
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(scan_fn, h0, (dcy_t, s_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)        # (B,nc,H,P,N) state before chunk
+
+    # inter-chunk contribution: y += C_i exp(cs_i) h_prev
+    in_decay = jnp.exp(cs)                        # (B,nc,L,H)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc.astype(jnp.float32),
+                         h_prevs, in_decay)
+
+    y = y_intra + y_inter + xc.astype(jnp.float32) * D[None, None, None, :,
+                                                       None]
+    y = y.reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, B_, C_, D, h):
+    """One-token recurrence. x: (B, H, P); dt: (B, H); B_, C_: (B, N);
+    h: (B, H, P, N). Returns (y, h')."""
+    dA = jnp.exp(dt * A[None, :])                                # (B,H)
+    hB = jnp.einsum("bh,bn,bhp->bhpn", dt, B_.astype(jnp.float32),
+                    x.astype(jnp.float32))
+    h = h * dA[..., None, None] + hB
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), h
+
+
+def causal_conv(x, w, cache=None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (W, C). cache: (B, W-1, C)
+    from the previous step (decode). Returns (y, new_cache)."""
+    W = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([cache, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    new_cache = xx[:, -(W - 1):] if W > 1 else cache
+    return jax.nn.silu(y), new_cache

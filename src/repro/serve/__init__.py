@@ -1,0 +1,4 @@
+from .radix_kv import RadixKVManager
+from .engine import ServeEngine
+
+__all__ = ["RadixKVManager", "ServeEngine"]

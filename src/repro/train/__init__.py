@@ -1,0 +1,5 @@
+from .optimizer import adamw, adafactor, cosine_schedule
+from .step import TrainState, make_train_step, init_train_state
+
+__all__ = ["adamw", "adafactor", "cosine_schedule", "TrainState",
+           "make_train_step", "init_train_state"]

@@ -1,0 +1,131 @@
+"""Optimizers (pure-pytree): AdamW and Adafactor (factored second moment —
+the memory-viable choice for the 0.8T/1T MoE cells), plus LR schedules.
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``. Optimizer state
+inherits the params' sharding (leaf-for-leaf identical shapes, or factored
+vectors which XLA shards trivially).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.minimum(warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, dtype)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr = lr_fn(c)
+        b1c = 1 - b1 ** c.astype(jnp.float32)
+        b2c = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            u = u + weight_decay * p.astype(dtype)
+            return (-lr * u).astype(p.dtype), m, v
+
+        gl, treedef = jax.tree.flatten(grads)
+        ml = jax.tree.leaves(state["m"])
+        vl = jax.tree.leaves(state["v"])
+        pl = jax.tree.leaves(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(gl, ml, vl, pl)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        m = treedef.unflatten([o[1] for o in outs])
+        v = treedef.unflatten([o[2] for o in outs])
+        return updates, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern). Leaves with rank
+    >= 2 factor the last two dims into row/col statistics — O(sum dims) state
+    instead of O(prod dims); 1-D leaves fall back to full moments."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr = lr_fn(c)
+        beta = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = g32 * jax.lax.rsqrt(rms_r + eps)[..., None] * \
+                    jax.lax.rsqrt(vc + eps)[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), ns
+
+        gl, treedef = jax.tree.flatten(grads)
+        sl = treedef.flatten_up_to(state["s"])
+        pl = jax.tree.leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(gl, sl, pl)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        s = treedef.unflatten([o[1] for o in outs])
+        return updates, {"s": s, "count": c}
+
+    return Optimizer(init, update)

@@ -1,0 +1,90 @@
+"""Analytics vs networkx oracles on a random graph with non-contiguous IDs."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro import analytics as A
+from repro.core.radixgraph import RadixGraph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(3)
+    G = nx.gnm_random_graph(120, 420, seed=7)
+    for (u, v) in G.edges:
+        G[u][v]["weight"] = float(rng.uniform(0.5, 2.0))
+    ids = np.array([u + 5000 for u in G.nodes], dtype=np.uint64)
+    g = RadixGraph(n_max=512, key_bits=32, expected_n=128, batch=512,
+                   pool_blocks=4096, block_size=8, dmax=1024,
+                   undirected=True)
+    g.add_vertices(ids)
+    src = np.array([u + 5000 for u, v in G.edges], np.uint64)
+    dst = np.array([v + 5000 for u, v in G.edges], np.uint64)
+    w = np.array([G[u][v]["weight"] for u, v in G.edges], np.float32)
+    g.add_edges(src, dst, w)
+    snap = g.snapshot()
+    off = g.lookup(ids)
+    return G, g, snap, off, ids
+
+
+def test_bfs(graph):
+    G, g, snap, off, ids = graph
+    nodes = list(G.nodes)
+    depth = np.asarray(A.bfs(snap, jnp.int32(int(off[0]))))
+    exp = nx.single_source_shortest_path_length(G, nodes[0])
+    for i, nid in enumerate(nodes):
+        assert depth[int(off[i])] == exp.get(nid, -1)
+
+
+def test_sssp(graph):
+    G, g, snap, off, ids = graph
+    nodes = list(G.nodes)
+    dist = np.asarray(A.sssp(snap, jnp.int32(int(off[0])), max_iters=128))
+    exp = nx.single_source_dijkstra_path_length(G, nodes[0], weight="weight")
+    for i, nid in enumerate(nodes):
+        if nid in exp:
+            assert dist[int(off[i])] == pytest.approx(exp[nid], abs=1e-3)
+        else:
+            assert dist[int(off[i])] > 1e37
+
+
+def test_pagerank(graph):
+    G, g, snap, off, ids = graph
+    pr = np.asarray(A.pagerank(snap, iters=100))
+    exp = nx.pagerank(G, alpha=0.85, max_iter=500, tol=1e-12, weight=None)
+    for i, nid in enumerate(G.nodes):
+        assert pr[int(off[i])] == pytest.approx(exp[nid], abs=1e-6)
+
+
+def test_wcc(graph):
+    G, g, snap, off, ids = graph
+    lab = np.asarray(A.wcc(snap))
+    nodes = list(G.nodes)
+    for comp in nx.connected_components(G):
+        labels = {lab[int(off[nodes.index(x)])] for x in comp}
+        assert len(labels) == 1
+
+
+def test_triangle_count(graph):
+    G, g, snap, off, ids = graph
+    assert int(A.triangle_count(snap)) == \
+        sum(nx.triangles(G).values()) // 3
+
+
+def test_bc(graph):
+    G, g, snap, off, ids = graph
+    bc = np.asarray(A.bc(snap, jnp.asarray(off, jnp.int32)))
+    exp = nx.betweenness_centrality(G, normalized=False)
+    for i, nid in enumerate(G.nodes):
+        assert bc[int(off[i])] == pytest.approx(2 * exp[nid], abs=1e-2)
+
+
+def test_khop(graph):
+    G, g, snap, off, ids = graph
+    nodes = list(G.nodes)
+    kh = np.asarray(A.khop(snap, jnp.asarray(off[:8], jnp.int32), k=2))
+    for i in range(8):
+        exp = len(nx.single_source_shortest_path_length(
+            G, nodes[i], cutoff=2)) - 1
+        assert kh[i] == exp

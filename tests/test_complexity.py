@@ -1,0 +1,73 @@
+"""Paper Table 3 complexity discipline — structural assertions.
+
+We cannot wall-clock asymptotics on a noisy CPU, so we assert the structural
+facts the complexities follow from:
+  locate/insert/delete_v = O(lglg u): the SORT descent length is the layer
+    count, fixed at construction;
+  insert/update/delete_e = O(1) amortized: appends touch one slot; the
+    capacity discipline (cap <= 2x live + block slack) bounds compaction
+    work per Theorem 2; pool growth is bounded by ops;
+  get_ngbrs = O(d): reads exactly the vertex's extent.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.radixgraph import RadixGraph
+from repro.core.sort_optimizer import optimize_sort
+
+
+def test_sort_depth_is_lglg_u():
+    for x in (16, 32, 64):
+        l = max(2, round(math.log2(x)))
+        cfg = optimize_sort(10 ** 5, x, l)
+        assert len(cfg.fanout_bits) <= l          # pruning only shrinks
+        assert sum(cfg.fanout_bits) == x          # full key consumed
+
+
+def test_edge_append_touches_one_slot_per_op(rng):
+    """Pool occupancy grows by exactly the op count between compactions."""
+    g = RadixGraph(n_max=256, key_bits=16, expected_n=64, batch=64,
+                   pool_blocks=8192, block_size=8, dmax=1024)
+    sizes = []
+    for wave in range(6):
+        src = rng.integers(0, 8, 64).astype(np.uint64)
+        dst = rng.integers(0, 64, 64).astype(np.uint64)
+        g.add_edges(src, dst, rng.uniform(1, 2, 64).astype(np.float32))
+        sizes.append(int(np.sum(np.asarray(g.state.vt.size))))
+    # each wave appends <= 64 net entries (compaction only shrinks sizes)
+    for a, b in zip(sizes, sizes[1:]):
+        assert b - a <= 64
+
+
+def test_capacity_discipline_bounds_amortized_work(rng):
+    """cap_u <= 2*ceil(live/bs)*bs + incoming slack for every vertex
+    (Theorem 2's precondition) after arbitrary mixed traffic."""
+    g = RadixGraph(n_max=256, key_bits=16, expected_n=64, batch=128,
+                   pool_blocks=8192, block_size=8, dmax=1024)
+    for _ in range(5):
+        src = rng.integers(0, 16, 128).astype(np.uint64)
+        dst = rng.integers(0, 64, 128).astype(np.uint64)
+        w = rng.uniform(0, 2, 128).astype(np.float32)
+        w[rng.random(128) < 0.3] = 0
+        g.apply_ops(src, dst, w)
+    vt = g.state.vt
+    size = np.asarray(vt.size)
+    cap = np.asarray(vt.cap)
+    deg = np.asarray(vt.deg)
+    active = np.asarray(vt.del_time) == 0
+    bs = g.pool_spec.block_size
+    for u in np.nonzero(active)[0]:
+        live = max(int(deg[u]), 1)
+        assert cap[u] <= 2 * ((live + bs - 1) // bs) * bs + 2 * 128, u
+        assert size[u] <= cap[u]
+
+
+def test_get_neighbors_reads_extent_only(rng):
+    """The neighbor query width is the requested cap, independent of n/m."""
+    g = RadixGraph(n_max=512, key_bits=16, expected_n=64, batch=64,
+                   pool_blocks=4096, block_size=8, dmax=512)
+    g.add_edges(np.array([3, 3, 3], np.uint64), np.array([4, 5, 6], np.uint64))
+    ids, w = g.neighbors([3], width=64)[0]
+    assert set(ids.tolist()) == {4, 5, 6}

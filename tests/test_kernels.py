@@ -1,0 +1,86 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sort as S
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort
+from repro.kernels import ref as R
+from repro.kernels.compact import compact_rows_pallas
+from repro.kernels.frontier import frontier_pallas
+from repro.kernels.sort_lookup import sort_lookup_pallas
+
+
+@pytest.mark.parametrize("K,D", [(1, 8), (3, 16), (5, 64), (2, 128)])
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_compact_kernel_sweep(K, D, wdtype, rng):
+    n_cap = 64
+    dst = rng.integers(-1, n_cap, (K, D)).astype(np.int32)
+    w = np.round(rng.uniform(0, 2, (K, D))).astype(np.float32)
+    ts = rng.permutation(K * D).reshape(K, D).astype(np.int32)
+    size = rng.integers(0, D + 1, (K,)).astype(np.int32)
+    a = R.compact_rows_ref(jnp.asarray(dst), jnp.asarray(w, wdtype),
+                           jnp.asarray(ts), jnp.asarray(size))
+    b = compact_rows_pallas(jnp.asarray(dst), jnp.asarray(w, wdtype),
+                            jnp.asarray(ts), jnp.asarray(size), n_cap=n_cap)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(1, 64))
+def test_compact_kernel_read_ts(seed, size_hint):
+    rng = np.random.default_rng(seed)
+    K, D = 2, 32
+    dst = rng.integers(-1, 32, (K, D)).astype(np.int32)
+    w = np.round(rng.uniform(0, 2, (K, D))).astype(np.float32)
+    ts = rng.permutation(K * D).reshape(K, D).astype(np.int32)
+    size = np.minimum(size_hint, D) * np.ones(K, np.int32)
+    rt = int(rng.integers(0, K * D))
+    a = R.compact_rows_ref(*map(jnp.asarray, (dst, w, ts, size)), read_ts=rt)
+    b = compact_rows_pallas(*map(jnp.asarray, (dst, w, ts, size)),
+                            read_ts=rt, n_cap=64)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("n,tile", [(128, 64), (500, 128)])
+def test_sort_lookup_kernel(n, tile, rng):
+    cfg = optimize_sort(n, 32, 5)
+    spec = SortSpec.from_config(cfg, 2 * n)
+    stt = S.make_sort(spec)
+    ids = rng.choice(2 ** 32, n, replace=False).astype(np.uint64)
+    stt = S.insert_mappings(spec, stt, pack_keys(ids, 32),
+                            jnp.arange(n, dtype=jnp.int32),
+                            jnp.ones(n, bool))
+    q = np.concatenate([ids, rng.choice(2 ** 32, 2 * tile - n % tile or tile)
+                        .astype(np.uint64)])
+    q = q[: (len(q) // tile) * tile]
+    qk = pack_keys(q, 32)
+    a = R.sort_lookup_ref(stt.pools, stt.counts, qk,
+                          fanout_bits=spec.fanout_bits,
+                          bit_offsets=spec.bit_offsets)
+    b = sort_lookup_pallas(stt.pools, stt.counts, qk,
+                           fanout_bits=spec.fanout_bits,
+                           bit_offsets=spec.bit_offsets, tile=tile)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_frontier_kernel(seed):
+    rng = np.random.default_rng(seed)
+    NB, BS, n = 32, 8, 128
+    W = n // 32
+    owner = rng.integers(-1, n, NB).astype(np.int32)
+    dst = rng.integers(-1, n, (NB, BS)).astype(np.int32)
+    valid = rng.random((NB, BS)) < 0.5
+    f = rng.integers(0, 2 ** 32, W, dtype=np.uint32)
+    v = rng.integers(0, 2 ** 32, W, dtype=np.uint32)
+    a = R.frontier_ref(*map(jnp.asarray, (owner, dst, valid, f, v)))
+    b = frontier_pallas(*map(jnp.asarray, (owner, dst, valid, f, v)), tile=8)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step — output shapes + finiteness; prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch
+from repro.models.api import build_model, input_specs, param_counts
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_arch(arch).SMOKE
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.pos == "mrope":
+        p = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.stack([p, p, p])
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                      jnp.float32)
+    loss, grads = jax.value_and_grad(m.train_loss)(params, batch)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-1.3b",
+                                  "recurrentgemma-9b"])
+def test_prefill_decode_matches_forward(arch, rng):
+    """Greedy decode continuation == argmax of a full forward pass."""
+    cfg = get_arch(arch).SMOKE
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    # reference: full forward logits at the last position
+    from repro.models import lm
+    pos = lm.make_positions(cfg, toks)
+    h, _, _ = lm.forward(cfg, params, toks, pos, "train")
+    ref_logits = lm._unembed(cfg, params, h)
+
+    cache = m.init_cache(B, 64)
+    pl, cache = m.prefill(params, {"tokens": toks}, cache)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(ref_logits[:, -1]),
+                               rtol=2e-2, atol=2e-3)
+
+    # decode the next token and compare with forward over S+1
+    nxt = jnp.argmax(pl, -1).astype(jnp.int32)
+    dl, cache = m.decode(params, {"token": nxt,
+                                  "pos": jnp.full((B,), S, jnp.int32)}, cache)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    pos2 = lm.make_positions(cfg, toks2)
+    h2, _, _ = lm.forward(cfg, params, toks2, pos2, "train")
+    ref2 = lm._unembed(cfg, params, h2)[:, -1]
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(ref2),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_param_counts_match_published():
+    expect = {"mamba2-1.3b": 1.34, "qwen2.5-3b": 3.09, "phi3-mini-3.8b": 3.82,
+              "deepseek-coder-33b": 33.3, "kimi-k2-1t-a32b": 1041.0}
+    for arch, bn in expect.items():
+        tot, _ = param_counts(get_arch(arch).CONFIG)
+        assert tot / 1e9 == pytest.approx(bn, rel=0.02), arch
+    _, act = param_counts(get_arch("kimi-k2-1t-a32b").CONFIG)
+    assert act / 1e9 == pytest.approx(31.0, rel=0.05)
+
+
+def test_input_specs_cover_cells():
+    for arch in ARCH_IDS:
+        mod = get_arch(arch)
+        for shape, (kind, seq, batch) in SHAPES.items():
+            if shape in getattr(mod, "SKIPS", {}):
+                continue
+            specs = input_specs(mod.CONFIG, kind, seq, batch)
+            assert "tokens" in specs or "token" in specs

@@ -1,0 +1,69 @@
+"""SORT configuration optimizer (paper §3.2): DP == brute force, paper
+configs reproduced, Lemma 1, baseline dominance."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sort_optimizer import (expected_space, node_probability,
+                                       optimize_sort, uniform_config,
+                                       veb_config)
+
+
+def brute_force(n, x, l):
+    """Optimal over trees with AT MOST l layers, all fanouts >= 1 (zero
+    layers are pruned per paper §3.2)."""
+    best = None
+    for ll in range(1, l + 1):
+        for a in itertools.product(range(1, x + 1), repeat=ll):
+            if sum(a) < x:
+                continue
+            v = expected_space(list(a), x, n)
+            if best is None or v < best - 1e-9:
+                best = v
+    return best
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 200), st.integers(4, 10), st.integers(2, 3))
+def test_dp_matches_brute_force(n, x, l):
+    c = optimize_sort(n, x, l)
+    assert c.expected_space == pytest.approx(brute_force(n, x, l), rel=1e-6)
+
+
+def test_paper_fig12a_configs():
+    # the published optimal fanouts for u = 2^32, l = 5
+    assert optimize_sort(50_000, 32, 5).fanout_bits == (19, 4, 3, 3, 3)
+    assert optimize_sort(300_000, 32, 5).fanout_bits == (20, 3, 3, 3, 3)
+
+
+def test_lemma1_total_bits_exactly_x():
+    for n in (10, 1000, 10 ** 6):
+        for x in (16, 32, 48):
+            c = optimize_sort(n, x, 5)
+            assert sum(c.fanout_bits) == x
+
+
+def test_sort_dominates_baselines():
+    for n in (1000, 10 ** 5):
+        s = optimize_sort(n, 32, 5).expected_space
+        assert s <= uniform_config(n, 32, 5).expected_space + 1e-6
+        assert s <= veb_config(n, 32).expected_space + 1e-6
+
+
+def test_node_probability_sane():
+    assert node_probability(32, 32, 5) == 1.0       # whole-universe node
+    assert node_probability(32, 0, 1) == pytest.approx(2 ** -32, rel=1e-3)
+    p_small = node_probability(32, 8, 100)
+    p_big = node_probability(32, 16, 100)
+    assert 0 < p_small < p_big < 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10 ** 6), st.sampled_from([16, 32, 64]))
+def test_monotone_space_in_n(n, x):
+    a = optimize_sort(n, x, 5).expected_space
+    b = optimize_sort(min(2 * n, 2 ** x - 1), x, 5).expected_space
+    assert b >= a * 0.999

@@ -1,0 +1,74 @@
+"""Training loop + fault tolerance: loss decreases, exact resume, atomic
+saves, GC, async, elastic restore."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (Checkpointer, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs import get_arch
+from repro.data import TokenStream
+from repro.launch import train as train_mod
+from repro.models.api import build_model
+from repro.train import adamw, cosine_schedule, init_train_state, \
+    make_train_step
+
+
+def test_loss_decreases(tmp_path):
+    losses = train_mod.main(["--arch", "internlm2-1.8b", "--smoke",
+                             "--steps", "120", "--batch", "16",
+                             "--seq", "64", "--lr", "1e-3"])
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.05
+
+
+def test_checkpoint_exact_resume(tmp_path):
+    d = str(tmp_path / "ck")
+    common = ["--arch", "internlm2-1.8b", "--smoke", "--batch", "4",
+              "--seq", "32", "--schedule-total", "30"]
+    a = train_mod.main(common + ["--steps", "20", "--ckpt-dir", d,
+                                 "--ckpt-every", "10"])
+    b = train_mod.main(common + ["--steps", "30", "--ckpt-dir", d,
+                                 "--ckpt-every", "10"])
+    c = train_mod.main(common + ["--steps", "30"])
+    # resumed steps 20..29 equal the uninterrupted run's steps 20..29
+    np.testing.assert_allclose(b[-5:], c[-5:], rtol=2e-4, atol=1e-5)
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))}}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, tree, s, {"x": s}, keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_") and
+                   not p.name.endswith(".tmp"))
+    assert steps == [4, 5]
+    got, step, meta = restore_checkpoint(tmp_path, tree)
+    assert step == 5 and meta["x"] == 5
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(10.0))
+
+
+def test_checkpoint_async_and_elastic(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = {"w": jnp.ones((8, 4)) * 3}
+    ck.save_async(tree, 7, {"stream": {"step": 1, "seed": 0}})
+    ck.wait()
+    assert latest_step(tmp_path) == 7
+    # elastic: restore onto the current (1-device) topology with an explicit
+    # sharding — the save/restore path goes through full logical arrays
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    got, step, _ = restore_checkpoint(tmp_path, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+def test_stream_determinism():
+    s1 = TokenStream(128, 4, 16, seed=3)
+    a = [next(s1) for _ in range(3)]
+    s2 = TokenStream(128, 4, 16, seed=3)
+    s2.restore({"step": 2, "seed": 3})
+    b = next(s2)
+    np.testing.assert_array_equal(a[2]["tokens"], b["tokens"])
