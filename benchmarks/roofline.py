@@ -163,8 +163,9 @@ def _cell_cost(cfg, arch: str, shape: str, variant: str = 'baseline'):
             fn = jax.jit(entry, in_shardings=(psh, batch_sh, csh),
                          donate_argnums=(2,))
             compiled = fn.lower(pshapes, specs, cspec).compile()
-    cost = compiled.cost_analysis()
-    return float(cost["flops"]) * 16, float(cost.get("bytes accessed", 0.0)) * 16
+    from repro.launch.hlo import cost_dict
+    cost = cost_dict(compiled)
+    return float(cost.get("flops", 0.0)) * 16, float(cost.get("bytes accessed", 0.0)) * 16
 
 
 def analytic_bytes(arch: str, shape: str) -> float:

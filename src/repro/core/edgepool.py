@@ -389,7 +389,9 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
 
     ``w == 0`` is a deletion (paper: NULL weight log). Ops are timestamped
     ``clock + batch_index`` — the deterministic analogue of the paper's
-    per-log fetch_add ordering. Returns (pool, vt).
+    per-log fetch_add ordering. Returns (pool, vt, dropped) where ``dropped``
+    is the number of masked ops that could not be applied (pool exhaustion);
+    the distributed engine reports it per shard.
     """
     B = u.shape[0]
     bs = spec.block_size
@@ -468,7 +470,7 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     pool = pool._replace(clock=pool.clock + B,
                          garbage=pool.garbage + jnp.sum(wrote) // 4,
                          overflow=pool.overflow + jnp.where(dropped > 0, 1, 0))
-    return pool, vt
+    return pool, vt, dropped
 
 
 # --------------------------------------------------------------------------

@@ -23,7 +23,9 @@ from .sort import SortSpec, SortState
 from .sort_optimizer import SortConfig, optimize_sort
 from .vertex_table import VertexTable
 
-__all__ = ["RadixGraph", "GraphState", "GraphSnapshot"]
+__all__ = ["RadixGraph", "GraphState", "GraphSnapshot", "step_add_vertices",
+           "step_delete_vertices", "step_update_edges", "step_lookup",
+           "step_degree_counts"]
 
 
 class GraphState(NamedTuple):
@@ -45,20 +47,27 @@ class GraphSnapshot(NamedTuple):
 
 
 # --------------------------------------------------------------------------
-# jitted state transitions (static: sort spec, pool spec, batch size)
+# pure per-shard state transitions
+#
+# These are the single-shard building blocks: plain functions of
+# (static specs, GraphState, batched ops) -> new GraphState. The host
+# ``RadixGraph`` wrapper jits them below; ``repro.dist.graph_engine``
+# shard_maps/vmaps the very same functions over a stacked shard dim, so the
+# single- and multi-shard paths share one implementation.
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _add_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
-                  keys, mask):
+def step_add_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                      keys, mask):
+    """Locate-or-insert vertices. Returns (state, offsets, created)."""
     st, vt, off, created = vt_mod.ensure_vertices(sspec, state.sort, state.vt,
                                                   keys, mask)
     return GraphState(st, vt, state.pool), off, created
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _delete_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
-                     keys, mask):
+def step_delete_vertices(sspec: SortSpec, pspec: ep.PoolSpec,
+                         state: GraphState, keys, mask):
+    """Mark vertices deleted at the current clock. Returns
+    (state, offsets, found)."""
     ts = state.pool.clock
     st, vt, off, found = vt_mod.delete_vertices(sspec, state.sort, state.vt,
                                                 keys, mask, ts)
@@ -66,22 +75,48 @@ def _delete_vertices(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
     return GraphState(st, vt, pool), off, found
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _update_edges(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
-                  src_keys, dst_keys, w, mask):
+def step_update_edges(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                      src_keys, dst_keys, w, mask):
+    """Apply a batch of edge ops by vertex KEY (``w == 0`` deletes).
+
+    Returns (state, dropped): ``dropped`` counts masked ops that could not be
+    applied — vertex-table exhaustion (either endpoint) or pool exhaustion.
+    """
     B = src_keys.shape[0]
     keys = jnp.concatenate([src_keys, dst_keys], axis=0)
     m2 = jnp.concatenate([mask, mask])
     st, vt, off, _ = vt_mod.ensure_vertices(sspec, state.sort, state.vt,
                                             keys, m2)
     u, v = off[:B], off[B:]
-    pool, vt = ep.apply_edge_updates(pspec, state.pool, vt, u, v, w, mask)
-    return GraphState(st, vt, pool)
+    vtx_dropped = jnp.sum((mask & ((u < 0) | (v < 0))).astype(jnp.int32))
+    pool, vt, dropped = ep.apply_edge_updates(pspec, state.pool, vt, u, v, w,
+                                              mask)
+    return GraphState(st, vt, pool), dropped + vtx_dropped
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _lookup(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState, keys):
+def step_lookup(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState, keys):
+    """Key -> vertex-table offset (-1 absent)."""
     return sort_mod.lookup(sspec, state.sort, keys)
+
+
+def step_degree_counts(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                       keys, read_ts=None):
+    """Live (deduplicated, tombstone-free) out-degree per query key; 0 for
+    absent vertices. The owner-side answer of the distributed 1-hop query."""
+    off = sort_mod.lookup(sspec, state.sort, keys)
+    _, _, _, cnt = ep.get_neighbors(pspec, state.pool, state.vt, off,
+                                    read_ts=read_ts)
+    return cnt
+
+
+# --------------------------------------------------------------------------
+# jitted host-API wrappers (static: sort spec, pool spec)
+# --------------------------------------------------------------------------
+
+_add_vertices = jax.jit(step_add_vertices, static_argnums=(0, 1))
+_delete_vertices = jax.jit(step_delete_vertices, static_argnums=(0, 1))
+_update_edges = jax.jit(step_update_edges, static_argnums=(0, 1))
+_lookup = jax.jit(step_lookup, static_argnums=(0, 1))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 4))
@@ -162,6 +197,7 @@ class RadixGraph:
             pool=ep.make_edge_pool(self.pool_spec),
         )
         self._versions: list[tuple[int, GraphState]] = []
+        self.dropped_ops: int = 0  # masked edge ops refused at capacity
 
     # ---- batching helpers ----
     def _pad(self, arr, fill, dtype):
@@ -229,29 +265,28 @@ class RadixGraph:
                    pack_keys(pd[i:i + B], self.key_bits),
                    jnp.asarray(pw[i:i + B]), jnp.asarray(mask[i:i + B]))
 
+    def _apply_edge_batches(self, src, dst, w):
+        for sk, dk, pw, mask in self._edge_batches(src, dst, w):
+            self.state, dropped = _update_edges(self.sort_spec, self.pool_spec,
+                                                self.state, sk, dk, pw, mask)
+            self.dropped_ops += int(dropped)
+
     def add_edges(self, src, dst, weight=None):
         w = np.ones(len(np.asarray(src)), np.float32) if weight is None \
             else np.asarray(weight, np.float32)
         assert np.all(w != 0), "weight 0 is the NULL tombstone; use delete_edges"
-        for sk, dk, pw, mask in self._edge_batches(src, dst, w):
-            self.state = _update_edges(self.sort_spec, self.pool_spec,
-                                       self.state, sk, dk, pw, mask)
+        self._apply_edge_batches(src, dst, w)
 
     update_edges = add_edges  # same log-append op (paper: insert == update)
 
     def delete_edges(self, src, dst):
         w = np.zeros(len(np.asarray(src)), np.float32)  # NULL tombstones
-        for sk, dk, pw, mask in self._edge_batches(src, dst, w):
-            self.state = _update_edges(self.sort_spec, self.pool_spec,
-                                       self.state, sk, dk, pw, mask)
+        self._apply_edge_batches(src, dst, w)
 
     def apply_ops(self, src, dst, weight):
         """Order-preserving mixed stream: weight==0 deletes, else insert/update
         (the paper's mixed-updates workload, Fig. 9)."""
-        for sk, dk, pw, mask in self._edge_batches(src, dst,
-                                                   np.asarray(weight, np.float32)):
-            self.state = _update_edges(self.sort_spec, self.pool_spec,
-                                       self.state, sk, dk, pw, mask)
+        self._apply_edge_batches(src, dst, np.asarray(weight, np.float32))
 
     def neighbors(self, ids, width=None, read_ts=None, as_ids=True):
         """Get-neighbors for a batch of vertex IDs (paper: O(d) per vertex)."""
@@ -260,17 +295,17 @@ class RadixGraph:
         d, w, t, cnt = _neighbors(self.sort_spec, self.pool_spec, self.state,
                                   off, width, read_ts)
         d, w, cnt = np.asarray(d), np.asarray(w), np.asarray(cnt)
-        out = []
-        ids_np = np.asarray(self.state.vt.ids)
-        for i in range(d.shape[0]):
-            o = d[i, :cnt[i]]
-            if as_ids:
-                hi = ids_np[o, 0].astype(np.uint64)
-                lo = ids_np[o, 1].astype(np.uint64)
-                out.append(((hi << np.uint64(32)) | lo, w[i, :cnt[i]]))
-            else:
-                out.append((o, w[i, :cnt[i]]))
-        return out
+        if as_ids:
+            # one batched hi/lo gather over the whole (B, width) offset matrix
+            # (rows are front-packed, so entries past cnt[i] are -1: clip for
+            # the gather, then slice per vertex — never returned)
+            ids_np = np.asarray(self.state.vt.ids)
+            oc = np.clip(d, 0, ids_np.shape[0] - 1)
+            gids = (ids_np[oc, 0].astype(np.uint64) << np.uint64(32)) \
+                | ids_np[oc, 1].astype(np.uint64)
+            return [(gids[i, :cnt[i]], w[i, :cnt[i]])
+                    for i in range(d.shape[0])]
+        return [(d[i, :cnt[i]], w[i, :cnt[i]]) for i in range(d.shape[0])]
 
     def snapshot(self, read_ts=None, m_cap=None) -> GraphSnapshot:
         m_cap = m_cap or self.pool_spec.capacity_entries

@@ -1,0 +1,16 @@
+"""Distribution layer: sharding planner, gradient compression, and the
+vertex-space-sharded RadixGraph engine.
+
+Three independent modules:
+
+* :mod:`repro.dist.sharding` — rule-based partition planner mapping logical
+  axis names to mesh axes (consumed by ``models/lm.py`` and the launchers);
+* :mod:`repro.dist.compress` — int8 symmetric-scale gradient compression
+  with a half-ULP error bound (error-feedback friendly);
+* :mod:`repro.dist.graph_engine` — the paper's RadixGraph scaled over a
+  device mesh by vertex-space sharding (routed batched edge ops,
+  owner-answered queries).
+"""
+from . import compress, graph_engine, sharding  # noqa: F401
+
+__all__ = ["sharding", "compress", "graph_engine"]

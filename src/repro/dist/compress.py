@@ -1,0 +1,48 @@
+"""Gradient compression: symmetric-scale int8 quantization.
+
+``q = round(x / s)`` with ``s = max|x| / 127`` maps the tensor onto
+[-127, 127] with reconstruction error at most ``s / 2`` per element (half a
+quantization step — round-to-nearest never exceeds it, and the scale is
+chosen so no value clips). The bounded, zero-mean-ish error makes the codec
+safe for error-feedback accumulation: feeding the residual
+``x - dequantize(quantize(x))`` back into the next step telescopes, so the
+accumulated compressed signal tracks the accumulated true signal to within
+one residual. Hook :func:`error_feedback` into
+``train.make_train_step(grad_transform=...)`` to compress the gradient
+all-reduce 4x (fp32 -> int8 + one scalar).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "error_feedback"]
+
+
+def quantize_int8(x: jnp.ndarray,
+                  axis: Optional[int] = None) -> Tuple[jnp.ndarray,
+                                                       jnp.ndarray]:
+    """Returns (q int8, scale f32). ``axis=None`` uses one tensor-wide scale;
+    an int axis computes per-slice scales along that axis (kept broadcastable
+    so ``dequantize_int8(q, s)`` works unchanged)."""
+    ax = None if axis is None else (axis,)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax,
+                   keepdims=axis is not None)
+    s = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), s
+
+
+def dequantize_int8(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * s
+
+
+def error_feedback(g: jnp.ndarray, residual: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One error-feedback step: compress ``g + residual``, return the
+    decompressed signal to apply and the new residual to carry."""
+    corrected = g + residual
+    deq = dequantize_int8(*quantize_int8(corrected))
+    return deq, corrected - deq

@@ -1,0 +1,164 @@
+"""Rule-based partition planner.
+
+Model code annotates every tensor dim with a *logical* axis name ("fsdp",
+"tp", "batch", ...); a :class:`ShardingRules` table maps logical names to
+mesh axes. :func:`spec_for` resolves one tensor's logical annotation against
+a concrete mesh into a ``PartitionSpec`` with two safety rails:
+
+* **divisibility fallback** — a dim that is not divisible by the product of
+  its candidate mesh-axis sizes is replicated instead (never an XLA error;
+  e.g. 12 heads on a 16-way model axis, batch=1 long-context serving);
+* **no mesh axis twice** — within one tensor, a mesh axis already consumed
+  by an earlier dim is dropped from later candidates (e.g. "tp" and "tp_in"
+  both map to "model": square weights shard only the first dim).
+
+Rule entries may name axes missing from the current mesh (the planner
+filters by presence), so the same rule tables drive the 2x16x16 production
+mesh and a 1-device debug mesh.
+
+``set_rules`` pushes an active (rules, mesh) context consumed by
+:func:`constrain` — the logical-axis analogue of
+``with_sharding_constraint`` used inside model code — and inspected by
+dispatch heuristics (``models/lm.moe_apply``).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple, \
+    Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "TRAIN_RULES", "SERVE_RULES", "MOE_SERVE_RULES",
+           "VARIANTS", "spec_for", "param_partition_specs", "set_rules",
+           "constrain"]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class ShardingRules(dict):
+    """logical axis name -> mesh axis name | tuple of names | None."""
+
+
+# Training: ZeRO/FSDP over the (pod, data) axes + Megatron TP over "model".
+TRAIN_RULES = ShardingRules({
+    "layers": None,          # lax.scan dim — never sharded
+    "unit": None,            # hybrid block-pattern dim
+    "embed": None,           # norm scales et al. — replicated
+    "batch": ("pod", "data"),
+    "act_seq": None,         # activation sequence dim
+    "cache_seq": None,       # KV-cache sequence dim
+    "fsdp": ("pod", "data"),
+    "tp": "model",
+    "tp_in": "model",        # second TP dim of square weights -> dropped
+    "kv_tp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": None,         # dense MoE dispatch under FSDP training
+})
+
+# Serving: weights replicated over the batch axes (no FSDP all-gathers on
+# the latency path), pure TP over "model", requests sharded on (pod, data).
+SERVE_RULES = ShardingRules({**TRAIN_RULES, "fsdp": None})
+
+# MoE serving: expert parallelism over the batch axes; fsdp=None + experts
+# set is the signature models/lm.moe_apply keys the all-to-all dispatch on.
+MOE_SERVE_RULES = ShardingRules({**SERVE_RULES, "experts": ("pod", "data")})
+
+# Named planner/config deltas for ablation dry-runs (launch/dryrun
+# --variant, benchmarks/roofline): (rule overrides, ModelConfig overrides).
+VARIANTS: Dict[str, Tuple[Dict[str, MeshAxes], Dict[str, Any]]] = {
+    "baseline": ({}, {}),
+    "no_fsdp": ({"fsdp": None}, {}),
+    "no_tp": ({"tp": None, "tp_in": None, "kv_tp": None, "heads": None,
+               "kv_heads": None, "vocab": None}, {}),
+    "expert_parallel": ({"fsdp": None, "experts": ("pod", "data")}, {}),
+    "seq_parallel": ({"act_seq": "model"}, {}),
+    "no_remat": ({}, {"remat": False}),
+}
+
+
+def _candidate_axes(entry: MeshAxes, mesh_shape, used) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    return tuple(a for a in axes if a in mesh_shape and a not in used)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: ShardingRules, mesh) -> P:
+    """Resolve one tensor's logical annotation into a PartitionSpec.
+
+    ``axes`` is parallel to ``shape`` (None entries and any trailing dims are
+    replicated). Resolution is left-to-right; each rule entry is applied
+    all-or-nothing after filtering to axes present in the mesh.
+    """
+    mesh_shape = dict(mesh.shape)
+    used: set = set()
+    entries: List[MeshAxes] = []
+    for dim, name in zip(shape, axes):
+        entry: MeshAxes = None
+        if name is not None:
+            cand = _candidate_axes(rules.get(name), mesh_shape, used)
+            if cand:
+                n = math.prod(mesh_shape[a] for a in cand)
+                if n > 0 and dim % n == 0:
+                    used.update(cand)
+                    entry = cand[0] if len(cand) == 1 else cand
+        entries.append(entry)
+    return P(*entries)
+
+
+def param_partition_specs(shapes, logical, rules: ShardingRules, mesh):
+    """Map parallel (param shapes, logical annotations) pytrees to a pytree
+    of PartitionSpecs. ``shapes`` leaves are arrays/ShapeDtypeStructs;
+    ``logical`` mirrors the container structure with axis-name tuples at the
+    leaf positions (tuples are containers to jax.tree, hence the explicit
+    walk)."""
+    def rec(s, lg):
+        if hasattr(s, "shape"):
+            return spec_for(s.shape, tuple(lg), rules, mesh)
+        if isinstance(s, dict):
+            return {k: rec(v, lg[k]) for k, v in s.items()}
+        if isinstance(s, (list, tuple)):
+            out = [rec(a, b) for a, b in zip(s, lg)]
+            return type(s)(out) if not hasattr(s, "_fields") \
+                else type(s)(*out)
+        raise TypeError(f"unsupported params node: {type(s)!r}")
+    return rec(shapes, logical)
+
+
+class _RulesContext(NamedTuple):
+    rules: ShardingRules
+    mesh: Any
+
+
+_ACTIVE: List[_RulesContext] = []
+
+
+@contextlib.contextmanager
+def set_rules(rules: ShardingRules, mesh=None):
+    """Activate (rules, mesh) for ``constrain`` and dispatch heuristics."""
+    ctx = _RulesContext(ShardingRules(rules), mesh)
+    _ACTIVE.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x, *axes: Optional[str]):
+    """Constrain ``x`` to the active context's resolution of the logical
+    ``axes``. No-op outside a ``set_rules`` context (keeps model code usable
+    without a mesh, e.g. single-device tests)."""
+    if not _ACTIVE:
+        return x
+    ctx = _ACTIVE[-1]
+    if ctx.mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, ctx.rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUMemorySpace -> MemorySpace in newer pallas releases
+_ANY_MEMSPACE = getattr(pltpu, "MemorySpace",
+                        getattr(pltpu, "TPUMemorySpace", None)).ANY
+
 __all__ = ["sort_lookup_pallas"]
 
 
@@ -74,7 +78,7 @@ def sort_lookup_pallas(pools, counts, keys, *, fanout_bits, bit_offsets,
     in_specs = [pl.BlockSpec((tile, 2), lambda i: (i, 0))]
     # node pools stay unblocked in ANY memory (HBM); scalar loads chase them
     for _ in range(layers):
-        in_specs.append(pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY))
+        in_specs.append(pl.BlockSpec(memory_space=_ANY_MEMSPACE))
 
     out = pl.pallas_call(
         _make_kernel(layers, tuple(fanout_bits), tuple(bit_offsets), tile),

@@ -38,7 +38,7 @@ from repro.train.step import TrainState
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
     "results" / "dryrun"
 
-from repro.launch.hlo import parse_collectives
+from repro.launch.hlo import cost_dict, parse_collectives
 
 
 def _opt_state_specs(opt_state_shapes, params_shapes, pspecs):
@@ -183,7 +183,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     cbytes, ccounts = parse_collectives(compiled.as_text())
     tot, act = param_counts(cfg)
 

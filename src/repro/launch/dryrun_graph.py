@@ -22,7 +22,7 @@ from repro.core import edgepool as ep
 from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
 from repro.dist.graph_engine import make_apply_edges, make_sharded_state
-from repro.launch.hlo import parse_collectives
+from repro.launch.hlo import cost_dict, parse_collectives
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
     "results" / "dryrun"
@@ -62,7 +62,7 @@ def main(argv=None):
     compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     cb, cc = parse_collectives(compiled.as_text())
     rec = {
         "arch": "radixgraph-ingest", "shape": f"ops{B}",

@@ -12,6 +12,15 @@ from __future__ import annotations
 import re
 from typing import Dict, Tuple
 
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``: newer jax returns a dict,
+    0.4.x returns a one-element list of dicts (and None on some backends)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
@@ -81,9 +90,16 @@ def parse_collectives(hlo_text: str) -> Tuple[Dict[str, float],
                 continue
             rest = m.group(1)
             for c in COLLECTIVES:
-                if re.search(rf"\b{c}(-start)?\(", rest):
-                    lhs = rest.split("(", 1)[0]
-                    db[c] += _shape_bytes(lhs)
+                cm = re.search(rf"^(.*?)\b{c}(-start)?\(", rest)
+                if cm:
+                    # result type — possibly a tuple "(u32[...], ...)", which
+                    # a naive split at the first "(" would read as empty.
+                    # Async *-start tuples are (operand alias, result) pairs:
+                    # halve so the wire bytes aren't double-counted.
+                    b = _shape_bytes(cm.group(1))
+                    if cm.group(2) and cm.group(1).lstrip().startswith("("):
+                        b /= 2
+                    db[c] += b
                     dc[c] += 1
                     break
             if " while(" in rest or rest.startswith("while("):

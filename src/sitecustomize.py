@@ -1,0 +1,61 @@
+"""Interpreter-startup jax compatibility shim.
+
+Active in any process with ``src`` on PYTHONPATH (the repo's canonical
+``PYTHONPATH=src python -m ...`` invocation): CPython's ``site`` module
+imports ``sitecustomize`` from sys.path at startup.
+
+jax 0.4.37 (this container) predates two APIs the launch/benchmark/test
+entry points use before importing anything from ``repro``:
+
+* ``jax.sharding.AxisType`` (Auto / Explicit / Manual enum)
+* the ``axis_types=`` kwarg of ``jax.make_mesh``
+
+On 0.4.37 every mesh axis already behaves as Auto under jit, so the shim
+provides the enum and accepts-and-drops the kwarg; on jax versions that ship
+the real API it is a no-op. Importing jax here does NOT initialize the XLA
+backend, so entry points that set ``XLA_FLAGS`` (placeholder device counts)
+before first device use keep working.
+
+Set ``REPRO_NO_JAX_SHIM=1`` to disable.
+"""
+import os
+
+
+def _install():
+    try:
+        import jax
+        import jax.sharding as jsh
+    except Exception:
+        return
+
+    if not hasattr(jsh, "AxisType"):
+        import enum
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsh.AxisType = AxisType
+
+    import inspect
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return
+    if "axis_types" not in params:
+        import functools
+
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None,
+                      **kwargs):
+            return orig(axis_shapes, axis_names, *args, **kwargs)
+
+        jax.make_mesh = make_mesh
+
+
+if not os.environ.get("REPRO_NO_JAX_SHIM"):
+    _install()
+del os, _install

@@ -1,0 +1,106 @@
+"""Deterministic stand-in for the subset of the ``hypothesis`` API this
+repo's tests use (``given``, ``settings``, ``strategies.integers/lists/
+tuples/sampled_from/floats/booleans``).
+
+Installed into ``sys.modules["hypothesis"]`` by ``conftest.py`` ONLY when
+the real hypothesis (declared in pyproject's test extras) is not importable,
+so property tests still execute — with seeded pseudo-random examples instead
+of adaptive search/shrinking — rather than failing at collection on a
+missing optional dep.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__version__ = "0.0.mini"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def tuples(*strats):
+    return _Strategy(lambda r: tuple(s._draw(r) for s in strats))
+
+
+def lists(elements, min_size=0, max_size=None):
+    def draw(r):
+        hi = max_size if max_size is not None else min_size + 20
+        return [elements._draw(r) for _ in range(r.randint(min_size, hi))]
+    return _Strategy(draw)
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _n in ("integers", "sampled_from", "tuples", "lists", "booleans",
+           "floats"):
+    setattr(strategies, _n, globals()[_n])
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._mini_hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def given(*gargs, **gkwargs):
+    """Positional strategies bind to the function's LAST positional params
+    (hypothesis fills from the right); keyword strategies bind by name. The
+    wrapper keeps the remaining params visible so pytest fixtures/parametrize
+    compose."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        strats = dict(zip(names[len(names) - len(gargs):], gargs))
+        strats.update(gkwargs)
+        remaining = [p for n, p in sig.parameters.items() if n not in strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_ex = getattr(wrapper, "_mini_hyp_max_examples", 20)
+            rnd = random.Random(zlib.adler32(fn.__qualname__.encode()))
+            for i in range(n_ex):
+                drawn = {k: s._draw(rnd) for k, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                except BaseException:
+                    print(f"mini-hypothesis falsifying example "
+                          f"({i + 1}/{n_ex}): {drawn!r}")
+                    raise
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco

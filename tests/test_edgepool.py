@@ -127,3 +127,70 @@ def test_amortized_o1_defrag_count(rng):
         w = rng.uniform(0.5, 2, 256).astype(np.float32)
         g.apply_ops(src, dst, w)
     assert not g.overflowed
+
+
+# --------------------------------------------------------------------------
+# mixed streams with undirected=True: the interleaved directions must
+# preserve stream order (op i's two orientations land at timestamps 2i, 2i+1)
+# --------------------------------------------------------------------------
+
+def _undirected_oracle(ops):
+    oracle = {}
+    for s, d, w in ops:
+        for a, b in ((int(s), int(d)), (int(d), int(s))):
+            if w == 0.0:
+                oracle.pop((a, b), None)
+            else:
+                oracle[(a, b)] = float(w)
+    return oracle
+
+
+def _check_against_oracle(g, oracle, vids):
+    assert g.num_edges == len(oracle)
+    for vid in vids:
+        nb_ids, nb_w = g.neighbors([vid])[0]
+        got = dict(zip(nb_ids.tolist(), nb_w.tolist()))
+        exp = {b: w for (a, b), w in oracle.items() if a == vid}
+        assert got.keys() == exp.keys(), (vid, got, exp)
+        for k in exp:
+            assert got[k] == pytest.approx(exp[k])
+
+
+def test_mixed_stream_undirected_interleaved_order():
+    g = mk(undirected=True)
+    # one batch exercising every ordering hazard:
+    #  - update through the REVERSE orientation (op 2 overwrites op 0's edge)
+    #  - delete after update (op 3 kills both directions of (1,2))
+    #  - delete through the reverse orientation (op 5 kills op 4's edge)
+    #  - re-insert after delete of the same pair (op 6)
+    #  - self-loop (ops 2i/2i+1 collapse to one entry)
+    ops = [(1, 2, 1.0), (3, 1, 2.0), (2, 1, 5.0), (1, 2, 0.0),
+           (4, 2, 1.5), (2, 4, 0.0), (1, 2, 3.0), (2, 3, 7.0), (5, 5, 9.0)]
+    g.apply_ops(np.array([o[0] for o in ops], np.uint64),
+                np.array([o[1] for o in ops], np.uint64),
+                np.array([o[2] for o in ops], np.float32))
+    oracle = _undirected_oracle(ops)
+    assert oracle == {(1, 2): 3.0, (2, 1): 3.0, (1, 3): 2.0, (3, 1): 2.0,
+                      (2, 3): 7.0, (3, 2): 7.0, (5, 5): 9.0}
+    _check_against_oracle(g, oracle, [1, 2, 3, 4, 5])
+    assert not g.overflowed and g.dropped_ops == 0
+
+
+def test_mixed_stream_undirected_order_across_batches(rng):
+    """Same-pair churn split across apply_ops calls (and batch-pad
+    boundaries): the global clock must keep the interleaved directions
+    ordered."""
+    g = mk(undirected=True, batch=64)
+    ids = rng.integers(0, 16, (400, 2)).astype(np.uint64)
+    ws = rng.uniform(0.5, 2, 400).astype(np.float32)
+    ws[rng.random(400) < 0.3] = 0.0
+    all_ops = [(int(s), int(d), float(w))
+               for (s, d), w in zip(ids, ws)]
+    for lo in range(0, 400, 100):  # 4 calls, each multiple padded batches
+        chunk = all_ops[lo:lo + 100]
+        g.apply_ops(np.array([o[0] for o in chunk], np.uint64),
+                    np.array([o[1] for o in chunk], np.uint64),
+                    np.array([o[2] for o in chunk], np.float32))
+    oracle = _undirected_oracle(all_ops)
+    _check_against_oracle(g, oracle, sorted({o[0] for o in all_ops}))
+    assert not g.overflowed and g.dropped_ops == 0
