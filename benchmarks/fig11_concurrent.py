@@ -1,63 +1,127 @@
-"""Paper Fig. 11: concurrent reads & writes.
+"""Paper Fig. 11: concurrent reads & writes — through the graph query service.
 
-Thread-scaling becomes shard-scaling on the SPMD substrate: the distributed
-graph engine partitions the vertex space over N placeholder devices; writer
-throughput = batched edge ops routed via all_to_all, reader throughput =
-degree/1-hop queries answered by owners, interleaved 1:1 (the paper's mixed
-workload). Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 for
-the multi-shard points (benchmarks.run sets 8 by default via a subprocess).
+Thread-scaling becomes shard-scaling on the SPMD substrate, and the mixed
+workload now runs end-to-end through ``serve.graph_service``: the writer
+ingests micro-batches via the sharded engine while owner-routed degree reads
+are answered against sealed epochs (1:1 interleave, the paper's concurrent
+workload). After the stream drains, distributed BFS/PageRank answers from
+the service are validated against a single-shard ``RadixGraph`` reference —
+a mismatch raises.
+
+In-process runs measure the 1-shard configuration; multi-shard points run in
+a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``:
+
+  PYTHONPATH=src python -m benchmarks.fig11_concurrent            # 1 + 4 shards
+  PYTHONPATH=src python -m benchmarks.fig11_concurrent --shards 2 # one config
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+
 import numpy as np
-from jax.sharding import AxisType
 
-from repro.core import edgepool as ep
-from repro.core.keys import pack_keys
-from repro.core.sort import SortSpec
-from repro.core.sort_optimizer import optimize_sort
-from repro.dist.graph_engine import (make_apply_edges, make_khop_counts,
-                                     make_sharded_state)
+from .common import edge_stream, emit
 
-from .common import emit, timeit
+HEADER = ("fig11", "shards", "write_Mops", "read_Mqps", "bfs_ok", "pr_err")
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_one(shards: int, scale: float = 1.0, validate: bool = True):
+    import jax.numpy as jnp
+
+    from repro import analytics as A
+    from repro.core.radixgraph import RadixGraph
+    from repro.serve.graph_service import (GraphQueryService,
+                                           drive_mixed_workload)
+
+    n_v = max(256, int(1024 * scale))
+    n_e = max(2048, int(16384 * scale))
+    rng = np.random.default_rng(0)
+    src, dst, ids = edge_stream(n_v, n_e, "powerlaw", seed=0)
+    w = rng.uniform(0.5, 2, n_e).astype(np.float32)
+
+    svc = GraphQueryService(
+        n_shards=shards, n_per_shard=8192, expected_n=4096,
+        pool_blocks=16384, block_size=16, dmax=2048, k_max=128,
+        write_batch=1024 * shards, query_batch=256 * shards,
+        bfs_iters=32, pr_iters=20)
+
+    qids = ids[:min(256 * shards, n_v)]
+    dt, reads = drive_mixed_workload(svc, src, dst, w, qids)
+    assert svc.stats["ops_dropped"] == 0
+
+    tb = svc.submit_query("bfs", source=int(src[0]))
+    tp = svc.submit_query("pagerank")
+    svc.run()
+    res = {tb: svc.claim(tb), tp: svc.claim(tp)}
+
+    bfs_ok, pr_err = True, 0.0
+    if validate:
+        g = RadixGraph(n_max=4 * n_v, key_bits=32, expected_n=n_v,
+                       batch=1024, pool_blocks=32768, block_size=16,
+                       dmax=2048, k_max=128)
+        g.apply_ops(src, dst, w)
+        snap = g.snapshot()
+        off = g.lookup(ids)
+        s0 = int(g.lookup(np.array([src[0]], np.uint64))[0])
+        ref_d = np.asarray(A.bfs(snap, jnp.int32(s0)))
+        ref_pr = np.asarray(A.pagerank(snap, iters=20))
+        for i, vid in enumerate(ids):
+            if off[i] < 0:
+                # vertex never appeared in the sampled stream: it must be
+                # absent from the service's answers too
+                bfs_ok &= int(vid) not in res[tb] and int(vid) not in res[tp]
+                continue
+            if res[tb].get(int(vid), -2) != int(ref_d[int(off[i])]):
+                bfs_ok = False
+            pr_err = max(pr_err, abs(float(res[tp].get(int(vid), 0.0)) -
+                                     float(ref_pr[int(off[i])])))
+        assert bfs_ok, "sharded BFS diverged from single-shard reference"
+        assert pr_err < 1e-4, \
+            f"sharded PageRank diverged from reference (max err {pr_err})"
+
+    return [("fig11", shards, round(n_e / dt / 1e6, 5),
+             round(reads / dt / 1e6, 5), bfs_ok, f"{pr_err:.2e}")]
+
+
+def _subprocess_rows(shards: int, scale: float):
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={shards}",
+           "PYTHONPATH": "src"}
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig11_concurrent",
+         "--shards", str(shards), "--scale", str(scale)],
+        capture_output=True, text=True, env=env, cwd=str(REPO), timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"fig11 {shards}-shard subprocess failed:\n"
+                           + out.stderr[-2000:])
+    return [tuple(ln.split(",")) for ln in out.stdout.splitlines()
+            if ln.startswith("fig11,")]
 
 
 def run(scale: float = 1.0):
-    rows = [("fig11", "shards", "write_Mops", "read_Mqps")]
-    n_dev = len(jax.devices())
-    for shards in sorted({1, 2, 4, 8} & set(range(1, n_dev + 1))):
-        mesh = jax.make_mesh((shards,), ("data",),
-                             devices=jax.devices()[:shards],
-                             axis_types=(AxisType.Auto,))
-        cfg = optimize_sort(4096, 32, 5)
-        sspec = SortSpec.from_config(cfg, 8192)
-        pspec = ep.PoolSpec(n_blocks=int(16384 * scale), block_size=16,
-                            k_max=128, dmax=2048)
-        state = make_sharded_state(sspec, pspec, shards, 8192)
-        apply_fn = jax.jit(make_apply_edges(sspec, pspec, mesh, "data"))
-        khop = jax.jit(make_khop_counts(sspec, pspec, mesh, "data"))
-
-        rng = np.random.default_rng(0)
-        ids = rng.choice(2 ** 32, 2048, replace=False).astype(np.uint64)
-        B = 4096 * shards
-        sk = pack_keys(rng.choice(ids, B), 32)
-        dk = pack_keys(rng.choice(ids, B), 32)
-        w = jnp.asarray(rng.uniform(0.5, 2, B).astype(np.float32))
-        mask = jnp.ones(B, bool)
-        qk = pack_keys(ids[:1024], 32)
-
-        def mixed(state):
-            state, _ = apply_fn(state, sk, dk, w, mask)
-            cnt = khop(state, qk)
-            return state, cnt
-
-        t, (state, _) = timeit(mixed, state, iters=3)
-        rows.append(("fig11", shards, round(B / t / 1e6, 3),
-                     round(1024 / t / 1e6, 3)))
+    rows = [HEADER]
+    rows += run_one(1, scale)
+    rows += _subprocess_rows(4, scale)
     return emit(rows)
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=None,
+                    help="run ONE config in-process (the parent sets "
+                         "placeholder devices via XLA_FLAGS)")
+    ap.add_argument("--scale", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    if args.shards is None:
+        run(args.scale)
+    else:
+        emit(run_one(args.shards, args.scale))
+
+
 if __name__ == "__main__":
-    run()
+    main()

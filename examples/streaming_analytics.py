@@ -31,15 +31,19 @@ for wave in range(6):
     print(f"wave {wave}: ingested 8000 directed ops in {dt*1e3:.0f} ms "
           f"-> version {ts}, {g.num_edges} live edges")
 
-# analytics over the retained versions (old states stay readable — MVCC)
-for label, state in g._versions[::2]:
-    snap_g = RadixGraph.__new__(RadixGraph)
-    snap_g.__dict__.update(g.__dict__)
-    snap_g.state = state
-    snap = snap_g.snapshot()
+# analytics over the retained versions (old states stay readable — MVCC):
+# snapshot_at resolves each timestamp against the retained version that
+# still holds its history, even after later compactions/defrags
+for label, vts in g.retained_versions[::2]:
+    snap = g.snapshot_at(vts)
     pr = A.pagerank(snap, iters=10)
     wcc = A.wcc(snap)
     ncomp = len(set(np.asarray(wcc)[np.asarray(wcc) >= 0].tolist()))
     print(f"version {label}: m={int(snap.m)}, pr_sum="
           f"{float(jnp.sum(pr)):.3f}, components={ncomp}")
+
+# retained versions are device memory: release the ones we're done with
+for label, _ in g.retained_versions[:-1]:
+    g.release_version(label)
+print(f"retained after release: {g.retained_versions}")
 print("OK")

@@ -31,13 +31,56 @@ def _edge_valid(snap):
     return e < snap.m
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters",))
-def bfs(snap, source: jnp.ndarray, max_iters: int = 64):
-    """Level-synchronous BFS. Returns int32 depth per offset (-1 unreachable)."""
+# --------------------------------------------------------------------------
+# shard-local phases
+#
+# The per-level / per-iteration edge work of BFS and PageRank only ever
+# touches the LOCAL CSR: these phases are shared verbatim by the single-shard
+# algorithms below and by ``dist.graph_engine``, whose distributed loops run
+# one local phase per shard and then exchange frontiers / inflows over the
+# mesh axis (the combine phase).
+# --------------------------------------------------------------------------
+
+def csr_edges(snap):
+    """Loop-invariant local edge view (src row, validity, routed dst) —
+    build it ONCE outside a level/iteration loop and pass it to the phases
+    below, so the O(m_cap) searchsorted is never recomputed per level."""
     n = snap.indptr.shape[0] - 1
     src = edge_sources(snap.indptr, snap.dst.shape[0])
     ok = _edge_valid(snap)
     dst = jnp.where(ok, snap.dst, n)  # out-of-range -> dropped
+    return src, ok, dst
+
+
+def bfs_expand(snap, frontier: jnp.ndarray, edges=None) -> jnp.ndarray:
+    """One level expansion over the local CSR: bool[n] frontier -> bool[n]
+    rows hit by an out-edge of a frontier row."""
+    n = snap.indptr.shape[0] - 1
+    src, ok, dst = edges if edges is not None else csr_edges(snap)
+    live = ok & frontier[jnp.clip(src, 0, n - 1)]
+    return jnp.zeros((n + 1,), bool).at[jnp.where(live, dst, n)].max(
+        True)[:n]
+
+
+def pagerank_contrib(snap, pr: jnp.ndarray) -> jnp.ndarray:
+    """Per-row outgoing contribution pr/deg (0 for dangling rows)."""
+    deg = (snap.indptr[1:] - snap.indptr[:-1]).astype(jnp.float32)
+    return jnp.where(deg > 0, pr / jnp.maximum(deg, 1.0), 0.0)
+
+
+def pagerank_scatter(snap, contrib: jnp.ndarray, edges=None) -> jnp.ndarray:
+    """Scatter contributions along local CSR edges: float[n] -> inflow[n]."""
+    n = snap.indptr.shape[0] - 1
+    src, ok, dst = edges if edges is not None else csr_edges(snap)
+    return jnp.zeros((n + 1,)).at[dst].add(
+        jnp.where(ok, contrib[jnp.clip(src, 0, n - 1)], 0.0))[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def bfs(snap, source: jnp.ndarray, max_iters: int = 64):
+    """Level-synchronous BFS. Returns int32 depth per offset (-1 unreachable)."""
+    n = snap.indptr.shape[0] - 1
+    edges = csr_edges(snap)
 
     depth0 = jnp.full((n,), -1, jnp.int32).at[source].set(0)
     frontier0 = jnp.zeros((n,), bool).at[source].set(True)
@@ -48,9 +91,7 @@ def bfs(snap, source: jnp.ndarray, max_iters: int = 64):
 
     def body(c):
         depth, frontier, it = c
-        live = ok & frontier[jnp.clip(src, 0, n - 1)]
-        hit = jnp.zeros((n + 1,), bool).at[jnp.where(live, dst, n)].max(True)
-        nxt = hit[:n] & (depth < 0)
+        nxt = bfs_expand(snap, frontier, edges) & (depth < 0)
         depth = jnp.where(nxt, it + 1, depth)
         return depth, nxt, it + 1
 
@@ -89,22 +130,17 @@ def sssp(snap, source: jnp.ndarray, max_iters: int = 64):
 
 @functools.partial(jax.jit, static_argnames=("iters",))
 def pagerank(snap, iters: int = 20, damping: float = 0.85):
-    n = snap.indptr.shape[0] - 1
-    m_cap = snap.dst.shape[0]
-    src = edge_sources(snap.indptr, m_cap)
-    ok = _edge_valid(snap)
-    dst = jnp.where(ok, snap.dst, n)
     deg = (snap.indptr[1:] - snap.indptr[:-1]).astype(jnp.float32)
+    edges = csr_edges(snap)
     active = snap.active
     n_act = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
 
     pr0 = jnp.where(active, 1.0 / n_act, 0.0)
 
     def step(pr, _):
-        contrib = jnp.where(deg > 0, pr / jnp.maximum(deg, 1.0), 0.0)
+        contrib = pagerank_contrib(snap, pr)
         dangling = jnp.sum(jnp.where(active & (deg == 0), pr, 0.0))
-        inflow = jnp.zeros((n + 1,)).at[dst].add(
-            jnp.where(ok, contrib[jnp.clip(src, 0, n - 1)], 0.0))[:n]
+        inflow = pagerank_scatter(snap, contrib, edges)
         pr = jnp.where(active,
                        (1 - damping) / n_act + damping * (inflow + dangling / n_act),
                        0.0)

@@ -63,6 +63,8 @@ class EdgePool(NamedTuple):
     garbage: jnp.ndarray   # int32 scalar — stale entries since last defrag
     clock: jnp.ndarray     # int32 scalar — global timestamp
     overflow: jnp.ndarray  # int32 scalar — pool-exhaustion events
+    live_m: jnp.ndarray    # int32 scalar — live (deduped, tombstone-free) edges
+    live_dirty: jnp.ndarray  # int32 scalar — 1 when live_m needs a recount
 
 
 def make_edge_pool(spec: PoolSpec) -> EdgePool:
@@ -74,6 +76,7 @@ def make_edge_pool(spec: PoolSpec) -> EdgePool:
         ts=jnp.zeros((nb, bs), jnp.int32),
         owner=jnp.full((nb,), -1, jnp.int32),
         next_block=z, garbage=z, clock=jnp.ones((), jnp.int32), overflow=z,
+        live_m=z, live_dirty=z,
     )
 
 
@@ -301,6 +304,10 @@ def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     nxt_o = jnp.concatenate([so[1:], jnp.full((1,), -2, so.dtype)])
     nxt_d = jnp.concatenate([sd[1:], jnp.full((1,), -2, sd.dtype)])
     is_last = ((so != nxt_o) | (sd != nxt_d)) & sval
+    # live pairs after the rebuild (exact, policy-independent): the defrag is
+    # the counter's resynchronization point — ``live_m`` becomes exact and any
+    # dirtiness (vertex deletes, dropped ops) is healed here
+    live_cnt = jnp.sum((is_last & (sw != 0)).astype(jnp.int32))
     if spec.policy == "grow":
         keep = sval  # log-structured baseline: retain every version
     else:
@@ -374,7 +381,9 @@ def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     )
     pool = pool._replace(dst=new_dst, weight=new_w, ts=new_t, owner=new_owner,
                          next_block=total_blocks,
-                         garbage=jnp.zeros((), jnp.int32))
+                         garbage=jnp.zeros((), jnp.int32),
+                         live_m=live_cnt,
+                         live_dirty=jnp.zeros((), jnp.int32))
     return pool, vt
 
 
@@ -451,6 +460,37 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     op_ok = (su < INT_MAX) & (slot < cap_now) & (start >= 0)
     dropped = jnp.sum(((su < INT_MAX) & ~op_ok).astype(jnp.int32))
 
+    # ---- incremental live-edge accounting (probed BEFORE the appends land):
+    # a distinct (u, v) pair's post-batch liveness is decided by its LAST op;
+    # its pre-batch liveness is probed against u's current entries (last-
+    # writer-wins by timestamp — the same rule the snapshot applies), so
+    #   delta = Σ_pairs applied(last op) · [(w_last != 0) − was_live]
+    # keeps ``live_m`` exact without ever rebuilding a CSR. Drops make the
+    # counter unreliable (an earlier op of the pair may have landed): flag
+    # dirty and let the next defrag / host recount resynchronize. The probe
+    # scans up to ``dmax`` entries per owner; a probed vertex whose array is
+    # LARGER than the window could hide the pair's newest entry, so that
+    # case flags dirty too instead of silently drifting.
+    op_ok_orig = jnp.zeros((B,), bool).at[order].set(op_ok)
+    pu = jnp.where(valid, u, INT_MAX)
+    pv = jnp.where(valid, v, INT_MAX)
+    porder = jnp.lexsort((ts, pv, pu))   # (u, v, ts): last-per-pair = max ts
+    u2, v2, w2 = pu[porder], pv[porder], w[porder]
+    ok2 = op_ok_orig[porder]
+    nu = jnp.concatenate([u2[1:], jnp.full((1,), -2, u2.dtype)])
+    nv = jnp.concatenate([v2[1:], jnp.full((1,), -2, v2.dtype)])
+    pair_last = ((u2 != nu) | (v2 != nv)) & (u2 < INT_MAX)
+    d_e, w_e, t_e, p_size = _gather_vertex_entries(
+        spec, pool, vt, jnp.where(pair_last, u2, -1), spec.dmax)
+    t_match = jnp.where(d_e == v2[:, None], t_e, 0)  # clock starts at 1
+    newest = jnp.argmax(t_match, axis=1)
+    was_live = (jnp.max(t_match, axis=1) > 0) & \
+        (w_e[jnp.arange(B), newest] != 0)
+    delta = jnp.sum(jnp.where(pair_last & ok2,
+                              (w2 != 0).astype(jnp.int32) -
+                              was_live.astype(jnp.int32), 0))
+    probe_blind = jnp.any(pair_last & (p_size > spec.dmax))
+
     sv = v[order]
     sw_ = w[order]
     sts = ts[order]
@@ -469,7 +509,11 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     # estimate (¼ of writes) drives the proactive half-garbage defrag trigger
     pool = pool._replace(clock=pool.clock + B,
                          garbage=pool.garbage + jnp.sum(wrote) // 4,
-                         overflow=pool.overflow + jnp.where(dropped > 0, 1, 0))
+                         overflow=pool.overflow + jnp.where(dropped > 0, 1, 0),
+                         live_m=pool.live_m + delta,
+                         live_dirty=jnp.maximum(
+                             pool.live_dirty,
+                             ((dropped > 0) | probe_blind).astype(jnp.int32)))
     return pool, vt, dropped
 
 

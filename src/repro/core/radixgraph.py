@@ -25,7 +25,7 @@ from .vertex_table import VertexTable
 
 __all__ = ["RadixGraph", "GraphState", "GraphSnapshot", "step_add_vertices",
            "step_delete_vertices", "step_update_edges", "step_lookup",
-           "step_degree_counts"]
+           "step_degree_counts", "step_neighbors", "step_snapshot"]
 
 
 class GraphState(NamedTuple):
@@ -71,7 +71,13 @@ def step_delete_vertices(sspec: SortSpec, pspec: ep.PoolSpec,
     ts = state.pool.clock
     st, vt, off, found = vt_mod.delete_vertices(sspec, state.sort, state.vt,
                                                 keys, mask, ts)
-    pool = state.pool._replace(clock=state.pool.clock + 1)
+    # a vertex delete hides every incident edge (in- AND out-) at read time;
+    # in-degrees are not tracked, so the live-edge counter goes stale until
+    # the next defrag / host recount resynchronizes it
+    any_del = (jnp.sum(found.astype(jnp.int32)) > 0).astype(jnp.int32)
+    pool = state.pool._replace(
+        clock=state.pool.clock + 1,
+        live_dirty=jnp.maximum(state.pool.live_dirty, any_del))
     return GraphState(st, vt, pool), off, found
 
 
@@ -109,6 +115,16 @@ def step_degree_counts(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
     return cnt
 
 
+def step_neighbors(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+                   keys, width: int, read_ts=None):
+    """Fused key->offset lookup + MVCC get-neighbors: one device dispatch per
+    padded query batch (no host round-trip between SORT and the pool scan).
+    Returns (dst_offsets, weights, ts, counts) with rows front-packed."""
+    off = sort_mod.lookup(sspec, state.sort, keys)
+    return ep.get_neighbors(pspec, state.pool, state.vt, off,
+                            read_ts=read_ts, width=width)
+
+
 # --------------------------------------------------------------------------
 # jitted host-API wrappers (static: sort spec, pool spec)
 # --------------------------------------------------------------------------
@@ -117,18 +133,14 @@ _add_vertices = jax.jit(step_add_vertices, static_argnums=(0, 1))
 _delete_vertices = jax.jit(step_delete_vertices, static_argnums=(0, 1))
 _update_edges = jax.jit(step_update_edges, static_argnums=(0, 1))
 _lookup = jax.jit(step_lookup, static_argnums=(0, 1))
+_neighbors = jax.jit(step_neighbors, static_argnums=(0, 1, 4))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 4))
-def _neighbors(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState, off,
-               width: int, read_ts):
-    return ep.get_neighbors(pspec, state.pool, state.vt, off,
-                            read_ts=read_ts, width=width)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _snapshot(sspec: SortSpec, pspec: ep.PoolSpec, m_cap: int,
-              state: GraphState, read_ts):
+def step_snapshot(sspec: SortSpec, pspec: ep.PoolSpec, m_cap: int,
+                  state: GraphState, read_ts=None):
+    """Build the CSR ``GraphSnapshot`` of the live (or ``read_ts``-versioned)
+    graph. Pure per-shard transition: the host wrapper jits it below and the
+    distributed engine shard_maps it per shard (``dist.graph_engine``)."""
     vt = state.vt
     n_cap = vt.size.shape[0]
     so, sd, sw, stv, keep = ep.live_edges(pspec, state.pool, vt,
@@ -145,6 +157,9 @@ def _snapshot(sspec: SortSpec, pspec: ep.PoolSpec, m_cap: int,
     active = vt.del_time == 0
     return GraphSnapshot(indptr=indptr, dst=dst, weight=wgt,
                          n_rows=vt.num_rows, m=m, active=active, ids=vt.ids)
+
+
+_snapshot = jax.jit(step_snapshot, static_argnums=(0, 1, 2))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -196,8 +211,17 @@ class RadixGraph:
             vt=vt_mod.make_vertex_table(self.n_max),
             pool=ep.make_edge_pool(self.pool_spec),
         )
-        self._versions: list[tuple[int, GraphState]] = []
+        # retained MVCC versions: (label, version_ts, state)
+        self._versions: list[tuple[int, int, GraphState]] = []
         self.dropped_ops: int = 0  # masked edge ops refused at capacity
+        # epoch-cached CSR snapshots: (read_ts, m_cap) -> (state, snapshot).
+        # A hit requires identity with the CURRENT state pytree, so every
+        # mutation (which necessarily produces a new functional state)
+        # invalidates implicitly; mutators also clear the dict explicitly.
+        self._snap_cache: dict = {}
+        self._epoch: int = 0          # bumped by every mutating op
+        self.snapshot_hits: int = 0
+        self.snapshot_misses: int = 0
 
     # ---- batching helpers ----
     def _pad(self, arr, fill, dtype):
@@ -219,8 +243,16 @@ class RadixGraph:
             yield (pack_keys(padded[i:i + self.batch], self.key_bits),
                    jnp.asarray(mask[i:i + self.batch]))
 
+    def _invalidate(self):
+        """Every mutating op seals a new epoch: cached CSR snapshots of the
+        previous epoch are dropped (reads on an UNCHANGED graph keep hitting
+        the cache and never rescan the pool)."""
+        self._epoch += 1
+        self._snap_cache.clear()
+
     # ---- public API ----
     def add_vertices(self, ids):
+        self._invalidate()
         offs = []
         for keys, mask in self._key_batches(ids):
             self.state, off, _ = _add_vertices(self.sort_spec, self.pool_spec,
@@ -230,6 +262,7 @@ class RadixGraph:
         return np.concatenate(offs)[:n] if offs else np.zeros(0, np.int32)
 
     def delete_vertices(self, ids):
+        self._invalidate()
         for keys, mask in self._key_batches(ids):
             self.state, _, _ = _delete_vertices(self.sort_spec, self.pool_spec,
                                                 self.state, keys, mask)
@@ -266,6 +299,7 @@ class RadixGraph:
                    jnp.asarray(pw[i:i + B]), jnp.asarray(mask[i:i + B]))
 
     def _apply_edge_batches(self, src, dst, w):
+        self._invalidate()
         for sk, dk, pw, mask in self._edge_batches(src, dst, w):
             self.state, dropped = _update_edges(self.sort_spec, self.pool_spec,
                                                 self.state, sk, dk, pw, mask)
@@ -289,12 +323,23 @@ class RadixGraph:
         self._apply_edge_batches(src, dst, np.asarray(weight, np.float32))
 
     def neighbors(self, ids, width=None, read_ts=None, as_ids=True):
-        """Get-neighbors for a batch of vertex IDs (paper: O(d) per vertex)."""
-        off = jnp.asarray(self.lookup(ids))
+        """Get-neighbors for a batch of vertex IDs (paper: O(d) per vertex).
+
+        The SORT lookup is fused into the jitted read (``step_neighbors``):
+        one device dispatch per padded key batch, and the padded batch shape
+        keeps the jit cache warm across differently-sized queries."""
         width = width or self.pool_spec.dmax
-        d, w, t, cnt = _neighbors(self.sort_spec, self.pool_spec, self.state,
-                                  off, width, read_ts)
-        d, w, cnt = np.asarray(d), np.asarray(w), np.asarray(cnt)
+        n = len(np.asarray(ids))
+        ds, ws, cs = [], [], []
+        for keys, _ in self._key_batches(ids):
+            bd, bw, _, bcnt = _neighbors(self.sort_spec, self.pool_spec,
+                                         self.state, keys, width, read_ts)
+            ds.append(np.asarray(bd))
+            ws.append(np.asarray(bw))
+            cs.append(np.asarray(bcnt))
+        d = np.concatenate(ds)[:n]
+        w = np.concatenate(ws)[:n]
+        cnt = np.concatenate(cs)[:n]
         if as_ids:
             # one batched hi/lo gather over the whole (B, width) offset matrix
             # (rows are front-packed, so entries past cnt[i] are -1: clip for
@@ -308,9 +353,37 @@ class RadixGraph:
         return [(d[i, :cnt[i]], w[i, :cnt[i]]) for i in range(d.shape[0])]
 
     def snapshot(self, read_ts=None, m_cap=None) -> GraphSnapshot:
+        """Epoch-cached CSR view: repeated snapshots of an unchanged graph
+        return the SAME artifact without rescanning the pool; any mutation
+        invalidates (``snapshot_hits``/``snapshot_misses`` expose the
+        behaviour for tests and the serving layer)."""
         m_cap = m_cap or self.pool_spec.capacity_entries
-        return _snapshot(self.sort_spec, self.pool_spec, m_cap, self.state,
+        key = (None if read_ts is None else int(read_ts), m_cap)
+        hit = self._snap_cache.get(key)
+        if hit is not None and hit[0] is self.state:
+            self.snapshot_hits += 1
+            return hit[1]
+        self.snapshot_misses += 1
+        snap = _snapshot(self.sort_spec, self.pool_spec, m_cap, self.state,
                          read_ts)
+        self._snap_cache[key] = (self.state, snap)
+        return snap
+
+    def snapshot_at(self, ts: int, m_cap=None) -> GraphSnapshot:
+        """Historical CSR snapshot at operation timestamp ``ts``, resolved
+        against retained MVCC versions: the answering state is the EARLIEST
+        retained version whose version_ts >= ts (compactions after a
+        checkpoint may have dropped pre-checkpoint history from newer
+        states), falling back to the live state when ``ts`` is newer than
+        every checkpoint."""
+        if ts >= self.current_ts:
+            return self.snapshot(m_cap=m_cap)
+        cands = [v for v in self._versions if v[1] >= ts]
+        state = min(cands, key=lambda v: v[1])[2] if cands else self.state
+        if state is self.state:
+            return self.snapshot(read_ts=ts, m_cap=m_cap)
+        m_cap = m_cap or self.pool_spec.capacity_entries
+        return _snapshot(self.sort_spec, self.pool_spec, m_cap, state, ts)
 
     @property
     def current_ts(self) -> int:
@@ -322,10 +395,27 @@ class RadixGraph:
         Returns the version timestamp: reads at read_ts=this see exactly the
         current contents."""
         ts = self.current_ts
-        self._versions.append((label if label is not None else ts, self.state))
+        self._versions.append((label if label is not None else ts, ts,
+                               self.state))
         return ts
 
+    def release_version(self, label: int) -> int:
+        """Drop retained MVCC versions with the given label (as returned by /
+        passed to ``checkpoint_version``) so their device arrays can be
+        freed instead of leaking for the life of the process. Returns the
+        number of versions released."""
+        kept = [v for v in self._versions if v[0] != label]
+        released = len(self._versions) - len(kept)
+        self._versions = kept
+        return released
+
+    @property
+    def retained_versions(self) -> list:
+        """(label, version_ts) of every retained MVCC version."""
+        return [(lbl, ts) for lbl, ts, _ in self._versions]
+
     def defrag(self):
+        self._invalidate()
         self.state = _defrag(self.sort_spec, self.pool_spec, self.state)
 
     # ---- introspection ----
@@ -335,7 +425,24 @@ class RadixGraph:
 
     @property
     def num_edges(self) -> int:
-        return int(self.snapshot().m)
+        """Live edge count from the incrementally-maintained counter — O(1),
+        no CSR rebuild. Vertex deletes / capacity drops mark the counter
+        dirty; the recount then reuses the (cached) snapshot and writes the
+        exact value back."""
+        pool = self.state.pool
+        if int(pool.live_dirty):
+            snap = self.snapshot()
+            m = int(snap.m)
+            self.state = GraphState(self.state.sort, self.state.vt,
+                                    pool._replace(
+                                        live_m=jnp.asarray(m, jnp.int32),
+                                        live_dirty=jnp.zeros((), jnp.int32)))
+            # re-key the cache entry onto the patched (semantically
+            # identical) state so the writeback doesn't evict it
+            m_cap = self.pool_spec.capacity_entries
+            self._snap_cache[(None, m_cap)] = (self.state, snap)
+            return m
+        return int(pool.live_m)
 
     def memory_bytes(self, materialized=True) -> int:
         """Paper-comparable memory: materialized SORT slots (4B), vertex rows

@@ -9,7 +9,9 @@ Three independent modules:
   with a half-ULP error bound (error-feedback friendly);
 * :mod:`repro.dist.graph_engine` — the paper's RadixGraph scaled over a
   device mesh by vertex-space sharding (routed batched edge ops,
-  owner-answered queries).
+  owner-answered queries) plus the distributed read path: per-shard CSR
+  snapshots and level-synchronous BFS / PageRank with frontier / inflow
+  exchange over the mesh axis.
 """
 from . import compress, graph_engine, sharding  # noqa: F401
 

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import analytics as alg
 from repro.core import edgepool as ep
 from repro.core import radixgraph as rg
 from repro.core import sort as sort_mod
@@ -44,7 +45,8 @@ from repro.core.radixgraph import GraphState
 from repro.core.sort import SortSpec
 
 __all__ = ["make_sharded_state", "make_apply_edges", "make_khop_counts",
-           "shard_of_keys"]
+           "make_sync_vertices", "make_snapshot", "make_bfs", "make_pagerank",
+           "collect_owner_values", "shard_of_keys"]
 
 
 def shard_of_keys(keys: jnp.ndarray, n_shards: int) -> jnp.ndarray:
@@ -195,3 +197,202 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         return sharded(state, query_keys)
 
     return khop
+
+
+# --------------------------------------------------------------------------
+# distributed read path: per-shard CSR snapshots + level-synchronous
+# analytics with frontier / inflow exchange over the mesh axis
+#
+# Edges live in the SOURCE vertex's shard, so a shard's CSR covers exactly
+# its local rows; a vertex that only appears as a destination has stub rows
+# (no edges) in source shards. ``make_sync_vertices`` registers every live
+# row's ID at its hash-owner so that each vertex has exactly one OWNER row —
+# the row analytics results are accumulated at and read from.
+# --------------------------------------------------------------------------
+
+def _row_meta(sspec, g: GraphState, n: int, axis: str):
+    """Per-local-row metadata shared by the distributed analytics bodies."""
+    my = jax.lax.axis_index(axis)
+    rowlive = g.vt.del_time == 0
+    owner = shard_of_keys(g.vt.ids, n)
+    return my, rowlive, owner, rowlive & (owner == my)
+
+
+def make_sync_vertices(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str):
+    """Build ``sync(state) -> state``: every live local row's vertex ID is
+    routed to its hash-owner shard and locate-or-inserted there, so each
+    vertex gains an owner row even if it only ever appeared as an edge
+    destination. Idempotent; run once before distributed analytics."""
+    n = int(mesh.shape[axis])
+
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        rowlive = g.vt.del_time == 0
+        owner = shard_of_keys(g.vt.ids, n)
+        slot, ok = _bucket_slots(owner, rowlive, n_cap)
+        NC = n * n_cap
+        payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
+                             ok.astype(jnp.uint32)], axis=-1)
+        buf = _scatter_rows(payload, jnp.where(ok, slot, NC), NC, 0)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+        r = a2a(buf.reshape(n, n_cap, 3)).reshape(NC, 3)
+        st, vt, _, _ = vt_mod.ensure_vertices(sspec, g.sort, g.vt,
+                                              r[:, 0:2], r[:, 2] == 1)
+        g = GraphState(st, vt, g.pool)
+        return jax.tree.map(lambda x: x[None], g)
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_snapshot(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                  m_cap: int, read_ts: Optional[int] = None):
+    """Build ``snap(state) -> GraphSnapshot`` with a leading shard dim: each
+    shard builds the CSR of ITS slice of the edge set (dst column holds
+    local row offsets) under shard_map — the distributed analogue of
+    ``RadixGraph.snapshot``, one fused SPMD program, no host gather."""
+
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, read_ts)
+        return jax.tree.map(lambda x: x[None], snap)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                     out_specs=P(axis), check_rep=False)
+
+
+def make_bfs(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+             m_cap: int, max_iters: int = 32):
+    """Build ``bfs(state, source_key) -> int32[n_shards, n_cap]`` — level-
+    synchronous distributed BFS. Per level each shard expands its LOCAL CSR
+    (``analytics.bfs_expand``), then newly-discovered row IDs are exchanged
+    to their owner shards, which mark depth and seed the next frontier.
+    Depths are authoritative at owner rows (-1 unreachable); stub rows may
+    record the level their shard first saw the vertex. Run on a
+    vertex-synced state (``make_sync_vertices``)."""
+    n = int(mesh.shape[axis])
+
+    def body(state, source_key):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        NC = n * n_cap
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        edges = alg.csr_edges(snap)   # loop-invariant: built once, not per level
+        my, rowlive, owner, _mine = _row_meta(sspec, g, n, axis)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+
+        off0 = sort_mod.lookup(sspec, g.sort, source_key[None, :])[0]
+        row = jnp.arange(n_cap, dtype=jnp.int32)
+        depth0 = jnp.where(row == off0, 0, -1)
+        frontier0 = (row == off0) & rowlive
+        go0 = jax.lax.psum(jnp.any(frontier0).astype(jnp.int32), axis) > 0
+
+        def cond(c):
+            _, _, it, go = c
+            return go & (it < max_iters)
+
+        def lvl(c):
+            depth, frontier, it, _ = c
+            new_local = alg.bfs_expand(snap, frontier, edges) & (depth < 0)
+            # stub rows are marked locally (each row notifies at most once);
+            # owner rows are marked via the exchange below, which also
+            # dedups discoveries arriving from several shards at once
+            slot, ok = _bucket_slots(owner, new_local, n_cap)
+            payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
+                                 ok.astype(jnp.uint32)], axis=-1)
+            buf = _scatter_rows(payload, jnp.where(ok, slot, NC), NC, 0)
+            r = a2a(buf.reshape(n, n_cap, 3)).reshape(NC, 3)
+            roff = sort_mod.lookup(sspec, g.sort, r[:, 0:2])
+            seen = (r[:, 2] == 1) & (roff >= 0)
+            hit = jnp.zeros((n_cap + 1,), bool).at[
+                jnp.where(seen, roff, n_cap)].max(True)[:n_cap]
+            depth = jnp.where(new_local & (owner != my), it + 1, depth)
+            nxt = hit & (depth < 0)
+            depth = jnp.where(nxt, it + 1, depth)
+            go = jax.lax.psum(jnp.any(nxt).astype(jnp.int32), axis) > 0
+            return depth, nxt, it + 1, go
+
+        depth, _, _, _ = jax.lax.while_loop(
+            cond, lvl, (depth0, frontier0, jnp.int32(0), go0))
+        return depth[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                  m_cap: int, iters: int = 20, damping: float = 0.85):
+    """Build ``pr(state) -> float32[n_shards, n_cap]`` — distributed
+    PageRank. Ranks live at owner rows; per iteration each shard scatters
+    contributions along its local CSR (``analytics.pagerank_scatter``) and
+    routes every live row's accumulated inflow back to the row's owner over
+    one all_to_all (the combine phase). Dangling mass and the active count
+    are psums over owner rows. Run on a vertex-synced state."""
+    n = int(mesh.shape[axis])
+
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        NC = n * n_cap
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        edges = alg.csr_edges(snap)   # loop-invariant: built once, not per iter
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        deg = (snap.indptr[1:] - snap.indptr[:-1]).astype(jnp.float32)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+
+        n_act = jnp.maximum(jax.lax.psum(
+            jnp.sum(mine.astype(jnp.float32)), axis), 1.0)
+        pr0 = jnp.where(mine, 1.0 / n_act, 0.0)
+
+        # the inflow routing is data-independent (every live row -> its
+        # owner): exchange the keys once, reuse the slots every iteration
+        slot, ok = _bucket_slots(owner, rowlive, n_cap)
+        keybuf = _scatter_rows(
+            jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
+                       ok.astype(jnp.uint32)], axis=-1),
+            jnp.where(ok, slot, NC), NC, 0)
+        rk = a2a(keybuf.reshape(n, n_cap, 3)).reshape(NC, 3)
+        roff = sort_mod.lookup(sspec, g.sort, rk[:, 0:2])
+        rtgt = jnp.where((rk[:, 2] == 1) & (roff >= 0), roff, n_cap)
+
+        def step(pr, _):
+            contrib = alg.pagerank_contrib(snap, pr)
+            local_in = alg.pagerank_scatter(snap, contrib, edges)
+            vbuf = _scatter_rows(local_in, jnp.where(ok, slot, NC), NC, 0.0)
+            rv = a2a(vbuf.reshape(n, n_cap)).reshape(NC)
+            inflow = jnp.zeros((n_cap + 1,)).at[rtgt].add(rv)[:n_cap]
+            dangling = jax.lax.psum(
+                jnp.sum(jnp.where(mine & (deg == 0), pr, 0.0)), axis)
+            pr = jnp.where(mine, (1 - damping) / n_act +
+                           damping * (inflow + dangling / n_act), 0.0)
+            return pr, None
+
+        pr, _ = jax.lax.scan(step, pr0, None, length=iters)
+        return pr[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def collect_owner_values(state: GraphState, values, n_shards: int) -> dict:
+    """Host-side merge of a distributed analytics result: per-shard owner-row
+    ``values`` (shape [n_shards, n_cap]) -> {vertex_id: value} over every
+    live vertex (each vertex read from its single owner row). Vectorized —
+    one mask + one zip, no per-row Python loop."""
+    import numpy as np
+    ids = np.asarray(state.vt.ids)
+    dt = np.asarray(state.vt.del_time)
+    vals = np.asarray(values)
+    owner = np.asarray(shard_of_keys(
+        jnp.asarray(ids.reshape(-1, 2)), n_shards)).reshape(ids.shape[:2])
+    mask = (dt == 0) & (owner == np.arange(ids.shape[0])[:, None])
+    vids = (ids[..., 0].astype(np.uint64) << np.uint64(32)) | \
+        ids[..., 1].astype(np.uint64)
+    return dict(zip(vids[mask].tolist(), vals[mask]))

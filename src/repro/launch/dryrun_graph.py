@@ -1,12 +1,18 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Dry-run of the PAPER'S OWN technique at pod scale: distributed RadixGraph
-ingestion (vertex-space sharding, routed batched edge ops) on 256/512-shard
-meshes. This is the third §Perf hillclimb cell.
+"""Dry-run of the PAPER'S OWN technique at pod scale — three modes:
+
+* ``--mode ingest`` (default): distributed RadixGraph ingestion (vertex-space
+  sharding, routed batched edge ops) on 256/512-shard meshes;
+* ``--mode analytics``: the versioned read path — per-shard CSR snapshot +
+  level-synchronous BFS and PageRank with frontier/inflow exchange over the
+  mesh axis, compiled as one fused SPMD program each;
+* ``--mode serve``: actually RUNS a small mixed read/write workload through
+  ``serve.graph_service`` on placeholder shards and records throughput.
 
   PYTHONPATH=src python -m repro.launch.dryrun_graph [--shards 256]
-      [--batch-per-shard 4096] [--no-pack]
+      [--mode ingest|analytics|serve] [--batch-per-shard 4096] [--no-pack]
 """
 import argparse
 import json
@@ -21,16 +27,137 @@ from jax.sharding import AxisType
 from repro.core import edgepool as ep
 from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
-from repro.dist.graph_engine import make_apply_edges, make_sharded_state
+from repro.dist.graph_engine import (make_apply_edges, make_bfs,
+                                     make_pagerank, make_sharded_state,
+                                     make_sync_vertices)
 from repro.launch.hlo import cost_dict, parse_collectives
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
     "results" / "dryrun"
 
 
+def _record(name: str, rec: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / name).write_text(json.dumps(rec, indent=1))
+
+
+def _compile_stats(compiled, dt: float) -> dict:
+    mem = compiled.memory_analysis()
+    cost = cost_dict(compiled)
+    cb, cc = parse_collectives(compiled.as_text())
+    return {
+        "status": "ok", "kind": "graph",
+        "flops": float(cost.get("flops", 0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0)),
+        "memory": {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "temp_size_in_bytes")
+                   if hasattr(mem, k)},
+        "collective_bytes": cb, "collective_counts": cc,
+        "compile_s": round(dt, 1),
+    }
+
+
+def _mode_ingest(args, mesh, sspec, pspec, n):
+    B = args.batch_per_shard * n
+    state_struct = jax.eval_shape(
+        lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
+    apply_fn = make_apply_edges(sspec, pspec, mesh, "data",
+                                pack=not args.no_pack)
+    fn = jax.jit(apply_fn, donate_argnums=(0,))
+    t0 = time.time()
+    compiled = fn.lower(
+        state_struct,
+        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+        jax.ShapeDtypeStruct((B,), jnp.float32),
+        jax.ShapeDtypeStruct((B,), bool)).compile()
+    rec = {
+        "arch": "radixgraph-ingest", "shape": f"ops{B}",
+        "mesh": f"graph{n}" + ("" if not args.no_pack else "+nopack"),
+        "chips": n, "batch_ops": B,
+        **_compile_stats(compiled, time.time() - t0),
+    }
+    name = f"radixgraph-ingest__{n}shards" + \
+        ("" if not args.no_pack else "__nopack") + ".json"
+    _record(name, rec)
+    per_dev = sum(rec["collective_bytes"].values())
+    print(f"[OK] graph-ingest x {n} shards (pack={not args.no_pack}): "
+          f"compile {rec['compile_s']:.0f}s, {B} ops/step, coll "
+          f"{per_dev/2**20:.2f} MiB/dev "
+          f"({sum(rec['collective_counts'].values()):.0f} launches), "
+          f"args+temp {sum(rec['memory'].values())/2**30:.2f} GiB")
+    return rec
+
+
+def _mode_analytics(args, mesh, sspec, pspec, n):
+    m_cap = args.n_per_shard * 4
+    state_struct = jax.eval_shape(
+        lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    recs = {}
+    for alg_name, build, in_structs in (
+            ("bfs", lambda: make_bfs(sspec, pspec, mesh, "data", m_cap,
+                                     max_iters=16),
+             (state_struct, key_struct)),
+            ("pagerank", lambda: make_pagerank(sspec, pspec, mesh, "data",
+                                               m_cap, iters=8),
+             (state_struct,))):
+        t0 = time.time()
+        compiled = jax.jit(build()).lower(*in_structs).compile()
+        recs[alg_name] = _compile_stats(compiled, time.time() - t0)
+    rec = {
+        "arch": "radixgraph-analytics", "shape": f"mcap{m_cap}",
+        "mesh": f"graph{n}", "chips": n, "m_cap": m_cap,
+        "status": "ok", "kind": "graph", "algs": recs,
+    }
+    _record(f"radixgraph-analytics__{n}shards.json", rec)
+    for a, r in recs.items():
+        per_dev = sum(r["collective_bytes"].values())
+        print(f"[OK] graph-{a} x {n} shards: compile {r['compile_s']:.0f}s, "
+              f"coll {per_dev/2**20:.2f} MiB/dev "
+              f"({sum(r['collective_counts'].values()):.0f} launches)")
+    return rec
+
+
+def _mode_serve(args, mesh, sspec, pspec, n):
+    # real execution (placeholder devices): a small Fig.-11-style mixed
+    # read/write stream through the query service, epochs sealed per step
+    from repro.serve.graph_service import (GraphQueryService,
+                                           drive_mixed_workload)
+    rng = np.random.default_rng(0)
+    n_v, n_e = 1024, 8192
+    ids = rng.choice(2 ** 32, n_v, replace=False).astype(np.uint64)
+    src, dst = rng.choice(ids, n_e), rng.choice(ids, n_e)
+    w = rng.uniform(0.5, 2, n_e).astype(np.float32)
+    svc = GraphQueryService(
+        n_shards=n, n_per_shard=8192, expected_n=4096, pool_blocks=16384,
+        block_size=16, dmax=2048, k_max=128, write_batch=512 * n,
+        query_batch=128 * n)
+    dt, reads = drive_mixed_workload(svc, src, dst, w, ids[:128 * n])
+    tb = svc.submit_query("bfs", source=int(src[0]))
+    svc.run()
+    bfs_answer = svc.claim(tb)
+    rec = {
+        "arch": "radixgraph-serve", "shape": f"ops{n_e}",
+        "mesh": f"graph{n}", "chips": n, "status": "ok", "kind": "graph",
+        "write_ops_per_s": round(n_e / dt, 1),
+        "read_q_per_s": round(reads / dt, 1),
+        "epochs_sealed": svc.stats["epochs_sealed"],
+        "ops_dropped": svc.stats["ops_dropped"],
+        "bfs_reached": sum(1 for v in bfs_answer.values() if v >= 0),
+    }
+    _record(f"radixgraph-serve__{n}shards.json", rec)
+    print(f"[OK] graph-serve x {n} shards: {rec['write_ops_per_s']:.0f} "
+          f"write ops/s, {rec['read_q_per_s']:.0f} reads/s, "
+          f"{rec['epochs_sealed']} epochs, dropped {rec['ops_dropped']}")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--shards", type=int, default=256)
+    ap.add_argument("--mode", choices=("ingest", "analytics", "serve"),
+                    default="ingest")
     ap.add_argument("--batch-per-shard", type=int, default=4096)
     ap.add_argument("--n-per-shard", type=int, default=1 << 17)
     ap.add_argument("--no-pack", action="store_true")
@@ -44,48 +171,8 @@ def main(argv=None):
                                  capacity_factor=4.0)
     pspec = ep.PoolSpec(n_blocks=args.n_per_shard // 2, block_size=16,
                         k_max=256, dmax=4096)
-    B = args.batch_per_shard * n
-
-    state_struct = jax.eval_shape(
-        lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
-    apply_fn = make_apply_edges(sspec, pspec, mesh, "data",
-                                pack=not args.no_pack)
-    fn = jax.jit(apply_fn, donate_argnums=(0,))
-
-    t0 = time.time()
-    lowered = fn.lower(
-        state_struct,
-        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
-        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
-        jax.ShapeDtypeStruct((B,), jnp.float32),
-        jax.ShapeDtypeStruct((B,), bool))
-    compiled = lowered.compile()
-    dt = time.time() - t0
-    mem = compiled.memory_analysis()
-    cost = cost_dict(compiled)
-    cb, cc = parse_collectives(compiled.as_text())
-    rec = {
-        "arch": "radixgraph-ingest", "shape": f"ops{B}",
-        "mesh": f"graph{n}" + ("" if not args.no_pack else "+nopack"),
-        "status": "ok", "kind": "graph", "chips": n, "batch_ops": B,
-        "flops": float(cost.get("flops", 0)),
-        "bytes_accessed": float(cost.get("bytes accessed", 0)),
-        "memory": {k: int(getattr(mem, k)) for k in
-                   ("argument_size_in_bytes", "temp_size_in_bytes")
-                   if hasattr(mem, k)},
-        "collective_bytes": cb, "collective_counts": cc,
-        "compile_s": round(dt, 1),
-    }
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    name = f"radixgraph-ingest__{n}shards" + \
-        ("" if not args.no_pack else "__nopack") + ".json"
-    (RESULTS / name).write_text(json.dumps(rec, indent=1))
-    per_dev = sum(cb.values())
-    print(f"[OK] graph-ingest x {n} shards (pack={not args.no_pack}): "
-          f"compile {dt:.0f}s, {B} ops/step, coll {per_dev/2**20:.2f} "
-          f"MiB/dev ({sum(cc.values()):.0f} launches), "
-          f"args+temp {sum(rec['memory'].values())/2**30:.2f} GiB")
-    return rec
+    return {"ingest": _mode_ingest, "analytics": _mode_analytics,
+            "serve": _mode_serve}[args.mode](args, mesh, sspec, pspec, n)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 from .radix_kv import RadixKVManager
 from .engine import ServeEngine
+from .graph_service import GraphQueryService
 
-__all__ = ["RadixKVManager", "ServeEngine"]
+__all__ = ["RadixKVManager", "ServeEngine", "GraphQueryService"]

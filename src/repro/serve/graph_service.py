@@ -1,0 +1,303 @@
+"""Concurrent graph query/update service over the sharded RadixGraph engine.
+
+The serving analogue of the paper's Fig. 11 mixed workload, mirroring the
+continuous-batching shape of ``serve.engine``: requests enter admission
+queues, the writer ingests fixed-size micro-batches through the distributed
+engine (one fused route->exchange->apply program per step), and every read is
+pinned to the latest SEALED epoch — an immutable functional state published
+by ``seal_epoch()``. Because states are pure pytrees, sealing is O(1)
+(a reference), a heavy analytics query can never observe a half-applied
+batch, and the writer never waits for readers (RapidStore-style decoupling).
+
+Scheduling per ``step()``:
+
+1. **write phase** — up to ``write_batch`` queued edge ops are padded into
+   one static-shape batch and applied (reuses the jit cache every step);
+2. **read phase** — up to ``query_batch`` queued queries are answered against
+   the sealed epoch: degree queries ride one batched owner-routed lookup,
+   BFS / PageRank run the distributed level-synchronous kernels on a lazily
+   vertex-synced copy of the sealed state and are memoized per epoch;
+3. **seal phase** — every ``seal_every`` steps the live state is published
+   as the new read epoch.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edgepool as ep
+from repro.core.keys import pack_keys
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort
+from repro.dist.graph_engine import (collect_owner_values, make_apply_edges,
+                                     make_bfs, make_khop_counts,
+                                     make_pagerank, make_sharded_state,
+                                     make_sync_vertices)
+
+__all__ = ["GraphQueryService", "Query", "drive_mixed_workload"]
+
+
+def drive_mixed_workload(svc: "GraphQueryService", src, dst, w, query_ids):
+    """The Fig. 11 measurement protocol, shared by benchmarks and dryruns:
+    prime the jit caches with one tiny step, enqueue the stream, then drain
+    it with a 1:1 interleave of write micro-batches and degree reads.
+    Returns (elapsed_seconds, reads_answered)."""
+    svc.submit_update(src[:1], dst[:1], w[:1])
+    svc.submit_query("degree", ids=query_ids)
+    svc.step()
+    svc.submit_update(src, dst, w)
+    reads = 0
+    t0 = time.perf_counter()
+    while svc.pending_writes:
+        svc.submit_query("degree", ids=query_ids)
+        svc.step()
+        reads += len(query_ids)
+    return time.perf_counter() - t0, reads
+
+
+@dataclasses.dataclass
+class Query:
+    ticket: int
+    kind: str                      # 'degree' | 'bfs' | 'pagerank'
+    ids: Optional[np.ndarray] = None     # degree: queried vertex IDs
+    source: Optional[int] = None         # bfs: source vertex ID
+
+
+class GraphQueryService:
+    """Micro-batching reader/writer front-end for the sharded graph engine."""
+
+    def __init__(self, n_shards: int = 1, *, n_per_shard: int = 8192,
+                 expected_n: int = 4096, key_bits: int = 32,
+                 pool_blocks: int = 16384, block_size: int = 16,
+                 k_max: int = 128, dmax: int = 2048,
+                 write_batch: int = 1024, query_batch: int = 256,
+                 seal_every: int = 1, max_pending: int = 65536,
+                 m_cap: Optional[int] = None, bfs_iters: int = 32,
+                 pr_iters: int = 20, damping: float = 0.85,
+                 undirected: bool = False, axis: str = "data"):
+        assert write_batch % n_shards == 0 and query_batch % n_shards == 0, \
+            "micro-batch sizes must be divisible by the shard count"
+        from jax.sharding import AxisType
+        self.n_shards = n_shards
+        self.key_bits = key_bits
+        self.write_batch = write_batch
+        self.query_batch = query_batch
+        self.seal_every = seal_every
+        self.max_pending = max_pending
+        self.undirected = undirected
+        self.mesh = jax.make_mesh((n_shards,), (axis,),
+                                  devices=jax.devices()[:n_shards],
+                                  axis_types=(AxisType.Auto,))
+        cfg = optimize_sort(expected_n, key_bits, 5)
+        self.sspec = SortSpec.from_config(cfg, n_per_shard)
+        self.pspec = ep.PoolSpec(n_blocks=pool_blocks, block_size=block_size,
+                                 k_max=k_max, dmax=dmax)
+        m_cap = m_cap or self.pspec.capacity_entries
+        self.m_cap = m_cap
+        self.state = make_sharded_state(self.sspec, self.pspec, n_shards,
+                                        n_per_shard)
+        self._apply = jax.jit(make_apply_edges(self.sspec, self.pspec,
+                                               self.mesh, axis))
+        self._degree = jax.jit(make_khop_counts(self.sspec, self.pspec,
+                                                self.mesh, axis))
+        self._sync = jax.jit(make_sync_vertices(self.sspec, self.pspec,
+                                                self.mesh, axis))
+        self._bfs = jax.jit(make_bfs(self.sspec, self.pspec, self.mesh, axis,
+                                     m_cap, max_iters=bfs_iters))
+        self._pagerank = jax.jit(make_pagerank(self.sspec, self.pspec,
+                                               self.mesh, axis,
+                                               m_cap, iters=pr_iters,
+                                               damping=damping))
+
+        # sealed read epoch (immutable pytree reference, O(1) to publish)
+        self.epoch = 0
+        self._sealed = self.state
+        self._sealed_synced = None          # lazy vertex-synced copy
+        self._analytics_cache: Dict = {}    # (kind, arg) -> result, per epoch
+
+        self._writes = collections.deque()  # (src_keys, dst_keys, w) chunks
+        self.pending_writes = 0
+        self._reads = collections.deque()
+        self._next_ticket = 0
+        self.results: Dict[int, object] = {}
+        self.stats = dict(steps=0, ops_applied=0, ops_dropped=0,
+                          queries_answered=0, epochs_sealed=0)
+
+    # ---- admission ----
+    def _keys(self, ids) -> np.ndarray:
+        return np.asarray(pack_keys(np.asarray(ids, np.uint64),
+                                    self.key_bits))
+
+    def submit_update(self, src, dst, weight=None) -> bool:
+        """Enqueue edge ops (weight 0 = delete). False = backpressure."""
+        src = np.asarray(src, np.uint64)
+        dst = np.asarray(dst, np.uint64)
+        w = np.ones(len(src), np.float32) if weight is None \
+            else np.asarray(weight, np.float32)
+        if self.undirected:
+            s2 = np.empty(2 * len(src), np.uint64)
+            d2 = np.empty_like(s2)
+            w2 = np.empty(2 * len(src), np.float32)
+            s2[0::2], s2[1::2] = src, dst
+            d2[0::2], d2[1::2] = dst, src
+            w2[0::2], w2[1::2] = w, w
+            src, dst, w = s2, d2, w2
+        if self.pending_writes + len(src) > self.max_pending:
+            return False
+        self._writes.append((self._keys(src), self._keys(dst), w))
+        self.pending_writes += len(src)
+        return True
+
+    def submit_query(self, kind: str, ids=None, source=None) -> Optional[int]:
+        """Enqueue a read. Returns a ticket (see ``results``) or None on
+        backpressure."""
+        assert kind in ("degree", "bfs", "pagerank"), kind
+        # reject malformed queries at admission, not mid-step
+        assert kind != "degree" or ids is not None, "degree query needs ids"
+        assert kind != "bfs" or source is not None, "bfs query needs a source"
+        if len(self._reads) >= self.max_pending:
+            return None
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._reads.append(Query(
+            ticket=t, kind=kind,
+            ids=None if ids is None else np.asarray(ids, np.uint64),
+            source=None if source is None else int(source)))
+        return t
+
+    # ---- epochs ----
+    def seal_epoch(self) -> int:
+        """Publish the live state as the read epoch. O(1): functional states
+        are immutable, so sealing is a reference, not a copy."""
+        self._sealed = self.state
+        self._sealed_synced = None
+        self._analytics_cache = {}
+        self.epoch += 1
+        self.stats["epochs_sealed"] += 1
+        return self.epoch
+
+    @property
+    def epoch_lag(self) -> int:
+        """Operations ingested since the read epoch was sealed (staleness
+        bound a reader observes)."""
+        live = int(np.asarray(self.state.pool.clock)[0])
+        sealed = int(np.asarray(self._sealed.pool.clock)[0])
+        return live - sealed
+
+    def _synced_sealed(self):
+        if self._sealed_synced is None:
+            self._sealed_synced = self._sync(self._sealed)
+        return self._sealed_synced
+
+    # ---- scheduling ----
+    def _write_phase(self):
+        if not self._writes:
+            return
+        B = self.write_batch
+        parts, need = [], B
+        while self._writes and need > 0:
+            sk, dk, w = self._writes[0]
+            if len(w) <= need:
+                parts.append(self._writes.popleft())
+                need -= len(w)
+            else:
+                parts.append((sk[:need], dk[:need], w[:need]))
+                self._writes[0] = (sk[need:], dk[need:], w[need:])
+                need = 0
+        take = B - need
+        self.pending_writes -= take
+        sk = np.zeros((B, 2), np.uint32)
+        dk = np.zeros((B, 2), np.uint32)
+        w = np.zeros((B,), np.float32)
+        mask = np.zeros((B,), bool)
+        sk[:take] = np.concatenate([p[0] for p in parts])
+        dk[:take] = np.concatenate([p[1] for p in parts])
+        w[:take] = np.concatenate([p[2] for p in parts])
+        mask[:take] = True
+        self.state, dropped = self._apply(self.state, jnp.asarray(sk),
+                                          jnp.asarray(dk), jnp.asarray(w),
+                                          jnp.asarray(mask))
+        self.stats["ops_applied"] += take
+        self.stats["ops_dropped"] += int(np.asarray(dropped).sum())
+
+    def _answer_degree(self, q: Query):
+        Q = self.query_batch
+        out = np.zeros((len(q.ids),), np.int32)
+        keys = self._keys(q.ids)
+        for lo in range(0, len(q.ids), Q):
+            chunk = keys[lo:lo + Q]
+            buf = np.zeros((Q, 2), np.uint32)
+            buf[:len(chunk)] = chunk
+            cnt = np.asarray(self._degree(self._sealed, jnp.asarray(buf)))
+            out[lo:lo + len(chunk)] = cnt[:len(chunk)]
+        return out
+
+    def _answer_analytics(self, q: Query):
+        key = (q.kind, q.source)
+        if key not in self._analytics_cache:
+            synced = self._synced_sealed()
+            if q.kind == "bfs":
+                sk = self._keys(np.array([q.source], np.uint64))[0]
+                depth = self._bfs(synced, jnp.asarray(sk))
+                val = collect_owner_values(synced, np.asarray(depth),
+                                           self.n_shards)
+            else:
+                pr = self._pagerank(synced)
+                val = collect_owner_values(synced, np.asarray(pr),
+                                           self.n_shards)
+            self._analytics_cache[key] = val
+        return self._analytics_cache[key]
+
+    def _read_phase(self):
+        served = 0
+        while self._reads:
+            q = self._reads[0]
+            # a cold analytics run fills the read budget; a memo hit on the
+            # sealed epoch is nearly free and never deferred to a new epoch
+            warm = q.kind != "degree" and \
+                (q.kind, q.source) in self._analytics_cache
+            if served >= self.query_batch and not warm:
+                break
+            self._reads.popleft()
+            if q.kind == "degree":
+                self.results[q.ticket] = self._answer_degree(q)
+                served += max(1, len(q.ids))
+            else:
+                self.results[q.ticket] = self._answer_analytics(q)
+                served += 1 if warm else self.query_batch
+            self.stats["queries_answered"] += 1
+
+    def step(self):
+        """One mixed read/write scheduling round (Fig. 11 concurrency):
+        ingest a write micro-batch, answer reads against the sealed epoch,
+        then seal if due."""
+        self._write_phase()
+        self._read_phase()
+        self.stats["steps"] += 1
+        if self.seal_every and self.stats["steps"] % self.seal_every == 0:
+            self.seal_epoch()
+
+    def claim(self, ticket: int):
+        """Pop a finished query's answer — bounds result retention for a
+        long-running service. KeyError if the ticket is unanswered."""
+        return self.results.pop(ticket)
+
+    def run(self, max_steps: int = 10_000):
+        """Drive scheduling rounds until both queues drain (raises if
+        ``max_steps`` is exhausted first — results are never silently
+        partial), then seal so queries admitted next observe every write."""
+        while (self._writes or self._reads) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        if self._writes or self._reads:
+            raise RuntimeError(
+                f"run(): queues not drained ({self.pending_writes} write "
+                f"ops, {len(self._reads)} reads still pending)")
+        self.seal_epoch()
+        return self.results

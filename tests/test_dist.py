@@ -133,3 +133,72 @@ def test_graph_engine_multishard_subprocess():
                          cwd=str(__import__("pathlib").Path(
                              __file__).resolve().parents[1]), timeout=600)
     assert "MULTISHARD-OK" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_distributed_analytics_subprocess():
+    """Versioned read path over 4 placeholder devices: vertex sync, per-shard
+    CSR snapshots, and level-synchronous BFS/PageRank with frontier/inflow
+    exchange must match the single-shard reference algorithms."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.core.sort import SortSpec
+        from repro.core.sort_optimizer import optimize_sort
+        from repro.core import edgepool as ep
+        from repro.core.keys import pack_keys
+        from repro.core.radixgraph import RadixGraph
+        from repro import analytics as A
+        from repro.dist.graph_engine import (make_sharded_state,
+            make_apply_edges, make_sync_vertices, make_snapshot, make_bfs,
+            make_pagerank, collect_owner_values)
+        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        cfg = optimize_sort(256, 32, 5)
+        sspec = SortSpec.from_config(cfg, 1024)
+        pspec = ep.PoolSpec(n_blocks=1024, block_size=8, k_max=32, dmax=256)
+        state = make_sharded_state(sspec, pspec, 4, 1024)
+        apply_fn = jax.jit(make_apply_edges(sspec, pspec, mesh, "data"))
+        rng = np.random.default_rng(1)
+        ids = rng.choice(2**32, 120, replace=False).astype(np.uint64)
+        B = 1024
+        src = rng.choice(ids, B); dst = rng.choice(ids, B)
+        w = rng.uniform(0.5, 2, B).astype(np.float32)
+        w[rng.random(B) < 0.1] = 0.0   # mixed stream incl. deletes
+        state, dropped = apply_fn(state, pack_keys(src, 32),
+                                  pack_keys(dst, 32), jnp.asarray(w),
+                                  jnp.ones(B, bool))
+        assert int(np.asarray(dropped).sum()) == 0
+        state = jax.jit(make_sync_vertices(sspec, pspec, mesh, "data"))(state)
+        m_cap = 4096
+        snap_fn = jax.jit(make_snapshot(sspec, pspec, mesh, "data", m_cap))
+        shard_snaps = snap_fn(state)
+        # per-shard edge counts sum to the global live count
+        g = RadixGraph(n_max=2048, key_bits=32, expected_n=256, batch=1024,
+                       pool_blocks=8192, block_size=8, dmax=2048)
+        g.apply_ops(src, dst, w)
+        assert int(np.asarray(shard_snaps.m).sum()) == g.num_edges
+        snap = g.snapshot(); off = g.lookup(ids)
+        sk = pack_keys(np.array([src[0]], np.uint64), 32)[0]
+        depth = jax.jit(make_bfs(sspec, pspec, mesh, "data", m_cap,
+                                 max_iters=32))(state, sk)
+        dd = collect_owner_values(state, np.asarray(depth), 4)
+        s0 = int(g.lookup(np.array([src[0]], np.uint64))[0])
+        ref_d = np.asarray(A.bfs(snap, jnp.int32(s0)))
+        pr = jax.jit(make_pagerank(sspec, pspec, mesh, "data", m_cap,
+                                   iters=25))(state)
+        dp = collect_owner_values(state, np.asarray(pr), 4)
+        ref_pr = np.asarray(A.pagerank(snap, iters=25))
+        for i, vid in enumerate(ids):
+            assert int(dd[int(vid)]) == int(ref_d[int(off[i])]), vid
+            assert abs(float(dp[int(vid)]) -
+                       float(ref_pr[int(off[i])])) < 1e-6, vid
+        print("DIST-ANALYTICS-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                          "PYTHONPATH": "src"},
+                         cwd=str(__import__("pathlib").Path(
+                             __file__).resolve().parents[1]), timeout=600)
+    assert "DIST-ANALYTICS-OK" in out.stdout, out.stderr[-2000:]

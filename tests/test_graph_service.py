@@ -1,0 +1,115 @@
+"""Concurrent graph query/update service: sealed-epoch read pinning, mixed
+scheduling, distributed analytics answers vs a single-shard reference."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analytics as A
+from repro.core.radixgraph import RadixGraph
+from repro.serve.graph_service import GraphQueryService
+
+
+@pytest.fixture(scope="module")
+def served():
+    rng = np.random.default_rng(7)
+    ids = rng.choice(2 ** 32, 90, replace=False).astype(np.uint64)
+    n_e = 1500
+    src, dst = rng.choice(ids, n_e), rng.choice(ids, n_e)
+    w = rng.uniform(0.5, 2, n_e).astype(np.float32)
+    w[rng.random(n_e) < 0.15] = 0.0
+    svc = GraphQueryService(n_shards=1, n_per_shard=2048, expected_n=512,
+                            pool_blocks=8192, block_size=8, dmax=512,
+                            k_max=64, write_batch=256, query_batch=64,
+                            pr_iters=25)
+    svc.submit_update(src, dst, w)
+    svc.run()
+    oracle = {}
+    for s, d, ww in zip(src, dst, w):
+        if ww == 0:
+            oracle.pop((int(s), int(d)), None)
+        else:
+            oracle[(int(s), int(d))] = float(ww)
+    return svc, ids, src, dst, w, oracle
+
+
+def test_degree_queries_match_oracle(served):
+    svc, ids, src, dst, w, oracle = served
+    t = svc.submit_query("degree", ids=ids)
+    res = svc.run()
+    deg = {}
+    for (s, d) in oracle:
+        deg[s] = deg.get(s, 0) + 1
+    exp = np.array([deg.get(int(x), 0) for x in ids])
+    assert np.array_equal(res[t], exp)
+    assert svc.stats["ops_dropped"] == 0
+
+
+def test_reads_pinned_to_sealed_epoch(served):
+    svc, ids, src, dst, w, oracle = served
+    probe = ids[:8]
+    # churn an edge between EXISTING vertices absent from the live edge set,
+    # so the fixture graph ends bit-identical for the other tests
+    extra_dst = next(int(x) for x in ids[20:]
+                     if (int(probe[0]), int(x)) not in oracle)
+    t0 = svc.submit_query("degree", ids=probe)
+    svc.run()
+    sealed_answer = svc.results[t0]
+    # enqueue a write plus a read: within the step, the read must answer
+    # from the PREVIOUS sealed epoch (the write lands first but is unsealed)
+    svc.submit_update(probe[:1], [extra_dst], [1.0])
+    t1 = svc.submit_query("degree", ids=probe)
+    svc.step()
+    assert np.array_equal(svc.results[t1], sealed_answer)
+    # after the end-of-step seal, the next read observes the write
+    t2 = svc.submit_query("degree", ids=probe)
+    svc.run()
+    bumped = sealed_answer.copy()
+    bumped[0] += 1
+    assert np.array_equal(svc.results[t2], bumped)
+    # restore for other tests
+    svc.submit_update(probe[:1], [extra_dst], [0.0])
+    svc.run()
+
+
+def test_analytics_match_single_shard_reference(served):
+    svc, ids, src, dst, w, oracle = served
+    tb = svc.submit_query("bfs", source=int(src[0]))
+    tp = svc.submit_query("pagerank")
+    res = svc.run()
+
+    g = RadixGraph(n_max=512, key_bits=32, expected_n=128, batch=512,
+                   pool_blocks=8192, block_size=8, dmax=512, k_max=64)
+    g.apply_ops(src, dst, w)
+    snap = g.snapshot()
+    off = g.lookup(ids)
+    s0 = int(g.lookup(np.array([src[0]], np.uint64))[0])
+    ref_d = np.asarray(A.bfs(snap, jnp.int32(s0)))
+    ref_pr = np.asarray(A.pagerank(snap, iters=25))
+    for i, vid in enumerate(ids):
+        assert res[tb].get(int(vid), -2) == int(ref_d[int(off[i])])
+        assert float(res[tp][int(vid)]) == pytest.approx(
+            float(ref_pr[int(off[i])]), abs=1e-6)
+
+
+def test_analytics_memoized_per_epoch(served):
+    svc, ids, src, dst, w, oracle = served
+    t1 = svc.submit_query("pagerank")
+    t2 = svc.submit_query("pagerank")
+    svc.run()
+    # both answered within one sealed epoch: the second rides the memo
+    assert svc.results[t2] is svc.results[t1]
+
+
+def test_backpressure():
+    svc = GraphQueryService(n_shards=1, n_per_shard=512, expected_n=128,
+                            pool_blocks=1024, block_size=8, dmax=128,
+                            k_max=32, write_batch=64, query_batch=32,
+                            max_pending=100)
+    ok = svc.submit_update(np.arange(90, dtype=np.uint64),
+                           np.arange(90, dtype=np.uint64) + 1)
+    assert ok
+    assert not svc.submit_update(np.arange(20, dtype=np.uint64),
+                                 np.arange(20, dtype=np.uint64) + 1)
+    svc.run()
+    assert svc.submit_update(np.arange(20, dtype=np.uint64),
+                             np.arange(20, dtype=np.uint64) + 1)

@@ -1,0 +1,190 @@
+"""Versioned read path: epoch-cached snapshots, the incremental live-edge
+counter, MVCC reads across defrag, and retained-version lifecycle."""
+import numpy as np
+import pytest
+
+from repro.core.radixgraph import RadixGraph
+
+
+def mk(**kw):
+    args = dict(n_max=256, key_bits=16, expected_n=64, batch=128,
+                pool_blocks=4096, block_size=8, dmax=512, k_max=32)
+    args.update(kw)
+    return RadixGraph(**args)
+
+
+def _wave(g, rng, n=200, ids=30, del_frac=0.2):
+    src = rng.integers(0, ids, n).astype(np.uint64)
+    dst = rng.integers(0, ids, n).astype(np.uint64)
+    w = rng.uniform(0.5, 2, n).astype(np.float32)
+    w[rng.random(n) < del_frac] = 0.0
+    g.apply_ops(src, dst, w)
+    return src, dst, w
+
+
+def test_snapshot_cache_hit_no_rescan(rng):
+    g = mk()
+    _wave(g, rng)
+    # num_edges reads the incremental counter: no CSR build at all
+    m = g.num_edges
+    assert g.snapshot_misses == 0 and g.snapshot_hits == 0
+    s1 = g.snapshot()
+    assert g.snapshot_misses == 1
+    s2 = g.snapshot()
+    assert s2 is s1, "unchanged graph must return the cached artifact"
+    assert (g.snapshot_hits, g.snapshot_misses) == (1, 1)
+    assert int(s1.m) == m
+    # repeated counter reads never build anything either
+    assert g.num_edges == m and g.snapshot_misses == 1
+
+
+def test_snapshot_cache_invalidated_by_every_mutation(rng):
+    g = mk()
+    _wave(g, rng)
+    mutations = [
+        lambda: g.add_vertices([200]),
+        lambda: g.add_edges(np.array([1], np.uint64),
+                            np.array([2], np.uint64)),
+        lambda: g.update_edges(np.array([1], np.uint64),
+                               np.array([2], np.uint64), [3.0]),
+        lambda: g.delete_edges(np.array([1], np.uint64),
+                               np.array([2], np.uint64)),
+        lambda: g.apply_ops(np.array([3], np.uint64),
+                            np.array([4], np.uint64), [1.5]),
+        lambda: g.delete_vertices([4]),
+        lambda: g.defrag(),
+    ]
+    for mutate in mutations:
+        before = g.snapshot()
+        misses = g.snapshot_misses
+        mutate()
+        after = g.snapshot()
+        assert after is not before, mutate
+        assert g.snapshot_misses == misses + 1, mutate
+
+
+def test_live_edge_counter_matches_rebuild_under_churn(rng):
+    g = mk()
+    oracle = {}
+    for _ in range(5):
+        src, dst, w = _wave(g, rng)
+        for s, d, ww in zip(src, dst, w):
+            if ww == 0:
+                oracle.pop((int(s), int(d)), None)
+            else:
+                oracle[(int(s), int(d))] = float(ww)
+        assert int(g.state.pool.live_dirty) == 0
+        assert g.num_edges == len(oracle)           # counter path
+        assert g.num_edges == int(g.snapshot().m)   # vs full rebuild
+    assert not g.overflowed
+
+
+def test_vertex_delete_dirties_then_recounts(rng):
+    g = mk()
+    g.apply_ops(np.array([1, 2, 3], np.uint64), np.array([2, 3, 1], np.uint64),
+                np.array([1, 1, 1], np.float32))
+    assert g.num_edges == 3
+    g.delete_vertices([2])
+    assert int(g.state.pool.live_dirty) == 1
+    assert g.num_edges == 1                         # recount via snapshot
+    assert int(g.state.pool.live_dirty) == 0        # written back
+    assert g.num_edges == 1                         # counter path again
+    # defrag is also a resynchronization point
+    g.delete_vertices([3])
+    g.defrag()
+    assert int(g.state.pool.live_dirty) == 0
+    assert g.num_edges == 0
+
+
+def test_counter_dirty_when_degree_exceeds_probe_window(rng):
+    """A vertex whose edge array outgrows the dmax probe window must flag
+    the counter dirty (the newest entry of a probed pair may sit past the
+    window) instead of silently drifting."""
+    g = mk(dmax=8, block_size=8, k_max=8)
+    src = np.zeros(16, np.uint64)
+    dst = np.arange(1, 17, dtype=np.uint64)
+    g.apply_ops(src, dst, np.ones(16, np.float32))
+    assert g.num_edges == 16
+    # update an existing pair: probe window (8) < degree (16)
+    g.apply_ops(np.zeros(1, np.uint64), np.array([16], np.uint64),
+                np.array([2.0], np.float32))
+    assert g.num_edges == 16        # recount, not 17
+    g.apply_ops(np.zeros(1, np.uint64), np.array([15], np.uint64),
+                np.array([0.0], np.float32))
+    assert g.num_edges == 15        # delete seen despite blind probe
+
+
+def test_mvcc_versioned_snapshot_across_defrag(rng):
+    """A versioned read taken BEFORE a defrag must still answer correctly
+    from the retained state: the defrag drops superseded versions from the
+    live arrays, so ``snapshot_at`` resolves against the checkpoint."""
+    g = mk()
+    g.apply_ops(np.array([1, 1, 2], np.uint64), np.array([2, 3, 3], np.uint64),
+                np.array([1.0, 2.0, 4.0], np.float32))
+    ts1 = g.checkpoint_version()
+    hist = {(1, 2): 1.0, (1, 3): 2.0, (2, 3): 4.0}
+    # overwrite (1,2), delete (1,3), add (3,1); then defrag away old versions
+    g.apply_ops(np.array([1, 1, 3], np.uint64), np.array([2, 3, 1], np.uint64),
+                np.array([9.0, 0.0, 1.0], np.float32))
+    g.defrag()
+    snap = g.snapshot_at(ts1)
+    assert int(snap.m) == len(hist)
+    off = {int(v): int(o) for v, o in zip([1, 2, 3], g.lookup([1, 2, 3]))}
+    dst = np.asarray(snap.dst)
+    wgt = np.asarray(snap.weight)
+    indptr = np.asarray(snap.indptr)
+    got = {}
+    for vid, o in off.items():
+        for e in range(indptr[o], indptr[o + 1]):
+            did = [k for k, v in off.items() if v == dst[e]][0]
+            got[(vid, did)] = float(wgt[e])
+    assert got == hist
+    # the live state answers the CURRENT view
+    assert g.num_edges == 3  # (1,2)=9, (2,3)=4, (3,1)=1
+
+
+def test_versioned_neighbor_reads_across_defrag(rng):
+    g = mk()
+    g.apply_ops(np.array([1, 1], np.uint64), np.array([2, 3], np.uint64),
+                np.array([1.0, 1.0], np.float32))
+    ts1 = g.checkpoint_version()
+    g.apply_ops(np.array([1, 1], np.uint64), np.array([2, 4], np.uint64),
+                np.array([0.0, 5.0], np.float32))
+    g.defrag()   # live arrays lose the (1,2) tombstone AND its old version
+    lbl, vts, state = g._versions[0][0], g._versions[0][1], g._versions[0][2]
+    assert vts == ts1
+    old = RadixGraph.__new__(RadixGraph)
+    old.__dict__.update(g.__dict__)
+    old.state = state
+    ids, w = old.neighbors([1], read_ts=ts1)[0]
+    assert set(ids.tolist()) == {2, 3}
+    # current view after defrag unaffected
+    ids, w = g.neighbors([1])[0]
+    assert set(ids.tolist()) == {3, 4}
+
+
+def test_release_version_prunes_retained_states(rng):
+    g = mk()
+    _wave(g, rng, n=50)
+    t1 = g.checkpoint_version(label=101)
+    _wave(g, rng, n=50)
+    t2 = g.checkpoint_version(label=102)
+    assert [lbl for lbl, _ in g.retained_versions] == [101, 102]
+    assert g.release_version(101) == 1
+    assert [lbl for lbl, _ in g.retained_versions] == [102]
+    # releasing an unknown label is a no-op
+    assert g.release_version(999) == 0
+    # snapshot_at still resolves via the remaining (later) version
+    snap = g.snapshot_at(t1)
+    assert int(snap.m) >= 0
+    assert g.release_version(102) == 1
+    assert g.retained_versions == []
+
+
+def test_snapshot_at_falls_back_to_live_state(rng):
+    g = mk()
+    _wave(g, rng, n=80, del_frac=0.0)
+    # no retained versions: historical read served from the live state
+    ts = g.current_ts
+    snap = g.snapshot_at(ts)
+    assert int(snap.m) == g.num_edges
