@@ -1,0 +1,179 @@
+"""Ingest fast-path throughput harness (updates/sec, fig8-style streams).
+
+Measures steady-state edge-update throughput for batched powerlaw streams on
+
+* the 1-shard ``RadixGraph`` host API (jitted padded batches), and
+* the 4-shard distributed engine (subprocess with placeholder devices:
+  route -> all_to_all -> apply, one fused SPMD program per batch),
+
+at a small and a large batch size, and records the numbers in
+``BENCH_ingest.json`` at the repo root.  The file keeps a ``before`` and an
+``after`` section so every PR that touches the write path has a recorded
+trajectory to beat:
+
+    PYTHONPATH=src python -m benchmarks.bench_ingest --record after
+    PYTHONPATH=src python -m benchmarks.bench_ingest --smoke   # CI artifact
+
+``--record before`` is only used once per optimization PR, on the pre-change
+tree; ``--record after`` (the default) refreshes the after section in place.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_ingest.json"
+
+# one jit cache across batch configs would need one batch size; each config
+# builds its own graph, so keep the stream modest and let compile warm out.
+FULL = dict(n_vertices=8192, n_ops=65536)
+SMOKE = dict(n_vertices=512, n_ops=4096)
+
+
+def _throughput(n_ops: int, dt: float) -> float:
+    return round(n_ops / dt, 1)
+
+
+def bench_single(n_vertices: int, n_ops: int, batch: int, seed: int = 0):
+    """1-shard ingest: batched powerlaw stream through the host API."""
+    from benchmarks.common import GRAPH_CAPS, edge_stream
+    from repro.core.radixgraph import RadixGraph
+
+    src, dst, _ = edge_stream(n_vertices, n_ops + batch, "powerlaw", seed)
+    kw = dict(GRAPH_CAPS)
+    kw["batch"] = batch
+    g = RadixGraph(key_bits=32, expected_n=n_vertices, undirected=False, **kw)
+    g.add_edges(src[:batch], dst[:batch])            # compile + warm
+    t0 = time.perf_counter()
+    g.add_edges(src[batch:], dst[batch:])
+    dt = time.perf_counter() - t0
+    assert g.dropped_ops == 0 and not g.overflowed
+    return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
+            "updates_per_s": _throughput(n_ops, dt),
+            "live_edges": int(g.num_edges)}
+
+
+def _shard_worker(n_vertices: int, n_ops: int, batch: int, n_shards: int,
+                  seed: int = 0):
+    """Runs inside the subprocess (placeholder devices already forced)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AxisType
+
+    from benchmarks.common import edge_stream
+    from repro.core import edgepool as ep
+    from repro.core.keys import pack_keys
+    from repro.core.sort import SortSpec
+    from repro.core.sort_optimizer import optimize_sort
+    from repro.dist.graph_engine import make_apply_edges, make_sharded_state
+
+    mesh = jax.make_mesh((n_shards,), ("data",),
+                         devices=jax.devices()[:n_shards],
+                         axis_types=(AxisType.Auto,))
+    cfg = optimize_sort(max(256, n_vertices), 32, 5)
+    sspec = SortSpec.from_config(cfg, 4 * max(1024, n_vertices))
+    pspec = ep.PoolSpec(n_blocks=max(4096, 16 * n_vertices), block_size=16,
+                        k_max=256, dmax=4096)
+    state = make_sharded_state(sspec, pspec, n_shards,
+                               4 * max(1024, n_vertices))
+    apply_fn = jax.jit(make_apply_edges(sspec, pspec, mesh, "data"))
+
+    src, dst, _ = edge_stream(n_vertices, n_ops + batch, "powerlaw", seed)
+    sk = np.asarray(pack_keys(src, 32))
+    dk = np.asarray(pack_keys(dst, 32))
+    w = np.ones((batch,), np.float32)
+    mask = np.ones((batch,), bool)
+
+    def step(state, lo):
+        return apply_fn(state, jnp.asarray(sk[lo:lo + batch]),
+                        jnp.asarray(dk[lo:lo + batch]), jnp.asarray(w),
+                        jnp.asarray(mask))
+
+    state, dropped = step(state, 0)                  # compile + warm
+    jax.block_until_ready(state)
+    total_drop = 0
+    t0 = time.perf_counter()
+    for lo in range(batch, n_ops + batch, batch):
+        state, dropped = step(state, lo)
+        total_drop += int(np.asarray(dropped).sum())
+    jax.block_until_ready(state)
+    dt = time.perf_counter() - t0
+    assert total_drop == 0, total_drop
+    return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
+            "updates_per_s": _throughput(n_ops, dt), "shards": n_shards}
+
+
+def bench_sharded(n_vertices: int, n_ops: int, batch: int, n_shards: int = 4):
+    """Spawn the worker under ``--xla_force_host_platform_device_count``."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_shards}")
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_ingest", "--_worker",
+         json.dumps(dict(n_vertices=n_vertices, n_ops=n_ops, batch=batch,
+                         n_shards=n_shards))],
+        capture_output=True, text=True, env=env, cwd=str(ROOT), timeout=1800)
+    for line in out.stdout.splitlines():
+        if line.startswith("WORKER-RESULT "):
+            return json.loads(line[len("WORKER-RESULT "):])
+    raise RuntimeError(f"shard worker failed:\n{out.stderr[-2000:]}")
+
+
+def run(smoke: bool = False, record: str = "after"):
+    scale = SMOKE if smoke else FULL
+    batches = (1024, 4096)
+    results = {"one_shard": {}, "four_shard": {}}
+    for b in batches:
+        r = bench_single(scale["n_vertices"], scale["n_ops"], b)
+        results["one_shard"][f"B{b}"] = r
+        print(f"1-shard  B={b}: {r['updates_per_s']:.0f} updates/s "
+              f"({r['ops']} ops in {r['seconds']}s)")
+    for b in batches:
+        r = bench_sharded(scale["n_vertices"], scale["n_ops"], b)
+        results["four_shard"][f"B{b}"] = r
+        print(f"4-shard  B={b}: {r['updates_per_s']:.0f} updates/s "
+              f"({r['ops']} ops in {r['seconds']}s)")
+
+    doc = {}
+    if OUT.exists():
+        doc = json.loads(OUT.read_text())
+    doc.setdefault("bench", "ingest")
+    if smoke:
+        # CI sanity record: never clobbers the committed full-scale
+        # before/after trajectory
+        doc["smoke"] = dict(stream=dict(scale, dist="powerlaw",
+                                        kind="insert"), **results)
+    else:
+        doc["scale"] = "full"
+        doc["stream"] = dict(scale, dist="powerlaw", kind="insert")
+        doc[record] = results
+    OUT.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"[OK] wrote {OUT} ({'smoke' if smoke else record})")
+    return doc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--record", choices=("before", "after"), default="after")
+    ap.add_argument("--_worker", help="internal: JSON kwargs for the "
+                    "in-subprocess shard worker")
+    args = ap.parse_args(argv)
+    if args._worker:
+        res = _shard_worker(**json.loads(args._worker))
+        print("WORKER-RESULT " + json.dumps(res))
+        return res
+    return run(smoke=args.smoke, record=args.record)
+
+
+if __name__ == "__main__":
+    main()

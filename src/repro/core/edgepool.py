@@ -41,6 +41,23 @@ class PoolSpec:
     block_size: int = 16   # entries per block (lane-friendly)
     k_max: int = 256       # max per-batch vertex compactions (fast path)
     dmax: int = 4096       # max edge-array entries handled by the fast path
+    # live-edge probe window (ingest fast path): the pre-append pair-liveness
+    # probe gathers at most ``probe_width`` entries per DISTINCT touched pair
+    # instead of a dense (B, dmax) slab; vertices whose arrays outgrow the
+    # window flag the counter dirty unless this batch's compaction already
+    # touched them (their liveness folds out of the compaction gather free).
+    probe_width: int = 256
+    # two-tier fast-path compaction: up to ``k_max`` overflowing vertices
+    # whose arrays fit the probe window compact at window width (the common
+    # allocation/growth case), and up to ``k_big`` wider ones (≤ dmax) pay
+    # the full-width gather — so per-batch compaction cost tracks the small
+    # tier, not k_max × dmax. A batch overflowing MORE than k_big big
+    # vertices falls back to a defrag (correct, amortized by the 2x capacity
+    # growth: a given vertex overflows O(log d) times total); hub-heavy
+    # streams that hit this repeatedly should raise k_big — each unit costs
+    # one extra dmax-width compaction row per batch.
+    k_big: int = 16
+    append_impl: str = "auto"   # 'ref' (jnp scatter) | 'pallas' fused kernel
     compact_impl: str = "auto"
     # edge-storage policy (baseline paradigms on the same substrate):
     #  'snaplog' — the paper: dedup compaction, log segment = snapshot size
@@ -154,17 +171,95 @@ def _scatter_entries(pool: EdgePool, tgt_block, lane, valid, d, w, t,
 
 
 # --------------------------------------------------------------------------
+# first-touch extent allocation (fast path, whole batch)
+# --------------------------------------------------------------------------
+
+def _alloc_extents(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                   ku: jnp.ndarray, kmask: jnp.ndarray,
+                   kincoming: jnp.ndarray):
+    """Assign fresh extents to vertices with NO edge array yet (the mass
+    first-touch case of every ingest stream). There is nothing to gather or
+    dedup — the whole batch's allocations are laid out with one cumsum and
+    initialized by a flat block-row scatter whose budget is proportional to
+    the BATCH (Σ blocks ≤ B/bs + Σ base_log), so thousands of new vertices
+    per batch never spill into the compaction tiers or force a defrag."""
+    bs = spec.block_size
+    K = ku.shape[0]
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+    base_log = spec.buf_blocks if spec.policy == "sorted" else 1
+
+    new_blocks = jnp.where(kmask,
+                           jnp.maximum(_cdiv(kincoming, bs), base_log), 0)
+    total = jnp.sum(new_blocks)
+    base = pool.next_block + jnp.cumsum(new_blocks) - new_blocks
+
+    # flat row -> owning vertex mapping (interval search over the layout);
+    # Σ new_blocks ≤ Σ(cdiv + base_log) ≤ K·(base_log+1) + B/bs, and the
+    # budget doubles as a belt-and-braces overflow guard
+    R_total = K * (base_log + 1) + _cdiv(K, bs)
+    fits = (pool.next_block + total <= nb) & (total <= R_total)
+    kmask = kmask & fits
+    r = jnp.arange(R_total, dtype=jnp.int32)
+    ends = jnp.cumsum(new_blocks)
+    krow = jnp.searchsorted(ends, r, side="right").astype(jnp.int32)
+    krc = jnp.clip(krow, 0, K - 1)
+    valid_r = (r < total) & fits
+    tgt_rows = jnp.where(valid_r, pool.next_block + r, nb)
+    pool = _scatter_block_rows(pool, tgt_rows,
+                               jnp.full((R_total, bs), -1, jnp.int32),
+                               jnp.zeros((R_total, bs), jnp.float32),
+                               jnp.zeros((R_total, bs), jnp.int32))
+    owner = pool.owner.at[tgt_rows].set(jnp.where(valid_r, ku[krc], -1),
+                                        mode="drop")
+
+    tgt = jnp.where(kmask, ku, n_cap)
+    vt = vt._replace(
+        cap=vt.cap.at[tgt].set(new_blocks * bs, mode="drop"),
+        start_block=vt.start_block.at[tgt].set(
+            jnp.where(new_blocks > 0, base, -1), mode="drop"),
+    )
+    pool = pool._replace(owner=owner,
+                         next_block=pool.next_block +
+                         jnp.where(fits, total, 0),
+                         overflow=pool.overflow + jnp.where(fits, 0, 1))
+    return pool, vt
+
+
+# --------------------------------------------------------------------------
 # per-vertex compaction (fast path) — paper Alg. 2 batched over K_MAX vertices
 # --------------------------------------------------------------------------
 
+def _fold_words(n_cap: int) -> int:
+    return (n_cap + 31) // 32
+
+
+def _scatter_block_rows(pool: EdgePool, tgt_rows, d_rows, w_rows, t_rows):
+    """Write whole (bs,)-entry block rows: compaction targets are contiguous
+    block-aligned extents, so one row-scatter replaces bs entry-scatters."""
+    return pool._replace(
+        dst=pool.dst.at[tgt_rows].set(d_rows, mode="drop"),
+        weight=pool.weight.at[tgt_rows].set(w_rows, mode="drop"),
+        ts=pool.ts.at[tgt_rows].set(t_rows, mode="drop"),
+    )
+
+
 def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
                       ku: jnp.ndarray, kmask: jnp.ndarray,
-                      kincoming: jnp.ndarray):
-    """Compact + grow the edge arrays of vertices ``ku`` (masked).
+                      kincoming: jnp.ndarray, width: int, fold: bool):
+    """Compact + grow the edge arrays of vertices ``ku`` (masked), each with
+    at most ``width`` occupied entries.
 
     New capacity (entries) = snapB + max(snapB, incomingB, 1) blocks where
     snapB = blocks(d') — the paper's "new array of capacity 2d, reserving d
     log entries", generalized so the pending batch always fits.
+
+    Returns (pool, vt, fold_ku, fold_bitmap). With ``fold=True`` the deduped
+    live set of each compacted vertex — already materialized by the (K,
+    width) compaction gather — is returned as a per-vertex bitmap over the
+    destination universe, so the live-edge probe stays exact for pairs whose
+    owner outgrew the bounded probe window but was compacted this batch.
+    ('grow' keeps duplicates and tombstones, so its fold is never valid.)
     """
     bs = spec.block_size
     K = ku.shape[0]
@@ -173,7 +268,7 @@ def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
 
     d0, w0, t0, size0 = _gather_vertex_entries(spec, pool, vt,
                                                jnp.where(kmask, ku, -1),
-                                               spec.dmax)
+                                               width)
     if spec.policy == "grow":
         # log-structured baseline: copy everything, no dedup (reads pay O(log))
         cd, cw, ct, cnt = d0, w0, t0, size0
@@ -204,26 +299,62 @@ def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     fits = pool.next_block + total <= nb  # caller guarantees via defrag check
     kmask = kmask & fits
 
-    # write compacted entries into the new extents
-    e = jnp.arange(spec.dmax, dtype=jnp.int32)[None, :]
-    tgt_blk = base[:, None] + e // bs
-    lane = jnp.broadcast_to(e % bs, (K, spec.dmax))
-    ok = kmask[:, None] & (e < cnt[:, None])
-    pool = _scatter_entries(pool, tgt_blk.reshape(-1), lane.reshape(-1),
-                            ok.reshape(-1), cd.reshape(-1), cw.reshape(-1),
-                            ct.reshape(-1))
+    # per-vertex liveness bitmap over dst offsets (fold for the live probe);
+    # after dedup each dst appears once per row, so distinct bits per word
+    # make scatter-add equivalent to scatter-OR
+    Ww = _fold_words(n_cap)
+    if fold and spec.policy != "grow":
+        ee = jnp.arange(width, dtype=jnp.int32)[None, :]
+        entry_ok = kmask[:, None] & (ee < cnt[:, None]) & (cd >= 0)
+        cdc = jnp.clip(cd, 0, n_cap - 1)
+        krow = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[:, None],
+                                (K, width))
+        word = jnp.where(entry_ok, cdc >> 5, Ww)
+        bit = jnp.where(entry_ok,
+                        jnp.uint32(1) << (cdc & 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+        fold_bitmap = jnp.zeros((K, Ww), jnp.uint32).at[
+            krow.reshape(-1), word.reshape(-1)].add(bit.reshape(-1),
+                                                    mode="drop")
+        fold_ku = jnp.where(kmask, ku, -1)
+    else:
+        fold_bitmap = jnp.zeros((K, Ww), jnp.uint32)
+        fold_ku = jnp.full((K,), -1, jnp.int32)
 
-    # clear slots beyond the compacted prefix inside the new extents
+    # ---- write the new extents as whole BLOCK ROWS (extents are block-
+    # aligned, so a row scatter replaces bs entry scatters): content rows
+    # carry the compacted prefix padded with empties, then pure-empty log
+    # rows out to the extent end. ``MB`` bounds any extent this call can
+    # build: snapB <= R1 rows, logB <= max(blocks(dmax), buf_blocks) rows
+    # (the caller defrags instead when a vertex's incoming exceeds dmax).
+    R1 = _cdiv(width, bs)
+    padw = R1 * bs - width
+    if padw:
+        cd = jnp.pad(cd, ((0, 0), (0, padw)), constant_values=-1)
+        cw = jnp.pad(cw, ((0, 0), (0, padw)))
+        ct = jnp.pad(ct, ((0, 0), (0, padw)))
+    e = jnp.arange(R1 * bs, dtype=jnp.int32)[None, :]
+    fillm = e < cnt[:, None]
+    rowi = jnp.arange(R1, dtype=jnp.int32)[None, :]
+    row_ok = kmask[:, None] & (rowi < new_blocks[:, None])
+    pool = _scatter_block_rows(
+        pool, jnp.where(row_ok, base[:, None] + rowi, nb).reshape(-1),
+        jnp.where(fillm, cd, -1).reshape(K * R1, bs),
+        jnp.where(fillm, cw, 0.0).reshape(K * R1, bs),
+        jnp.where(fillm, ct, 0).reshape(K * R1, bs))
+
+    MB = R1 + max(_cdiv(spec.dmax, bs), spec.buf_blocks) + 1
+    T2 = MB - R1
+    rowi2 = jnp.arange(R1, MB, dtype=jnp.int32)[None, :]
+    row_ok2 = kmask[:, None] & (rowi2 < new_blocks[:, None])
+    pool = _scatter_block_rows(
+        pool, jnp.where(row_ok2, base[:, None] + rowi2, nb).reshape(-1),
+        jnp.full((K * T2, bs), -1, jnp.int32),
+        jnp.zeros((K * T2, bs), jnp.float32),
+        jnp.zeros((K * T2, bs), jnp.int32))
     cap_entries = new_blocks * bs
-    tail_ok = kmask[:, None] & (e >= cnt[:, None]) & (e < cap_entries[:, None])
-    pool = _scatter_entries(pool, tgt_blk.reshape(-1), lane.reshape(-1),
-                            tail_ok.reshape(-1),
-                            jnp.full((K * spec.dmax,), -1, jnp.int32),
-                            jnp.zeros((K * spec.dmax,), jnp.float32),
-                            jnp.zeros((K * spec.dmax,), jnp.int32))
 
     # ownership: new extents -> u ; old extents -> -1 (garbage)
-    MB = _cdiv(spec.dmax, bs) * 2 + 2
     b = jnp.arange(MB, dtype=jnp.int32)[None, :]
     new_ob = jnp.where(kmask[:, None] & (b < new_blocks[:, None]),
                        base[:, None] + b, nb)
@@ -251,7 +382,7 @@ def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
         start_block=vt.start_block.at[tgt].set(jnp.where(new_blocks > 0, base,
                                                          -1), mode="drop"),
     )
-    return pool, vt
+    return pool, vt, fold_ku, fold_bitmap
 
 
 # --------------------------------------------------------------------------
@@ -417,37 +548,83 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     govf = g["gvalid"] & (need > gcap)
 
     # fast-path eligibility: whole current array fits the compaction buffer
-    small_ok = govf & (gcap <= spec.dmax) & (gsize <= spec.dmax)
+    # (a vertex whose per-batch incoming exceeds dmax defrags instead so the
+    # fast path's static extent bound always holds)
+    small_ok = govf & (gcap <= spec.dmax) & (gsize <= spec.dmax) & \
+        (g["gcount"] <= spec.dmax)
     n_ovf = jnp.sum(govf.astype(jnp.int32))
     n_small = jnp.sum(small_ok.astype(jnp.int32))
     jumbo = n_ovf != n_small
 
-    kidx = jnp.nonzero(small_ok, size=spec.k_max, fill_value=B)[0]
-    kmask = kidx < B
-    truncated = n_small > spec.k_max
-    ku = jnp.where(kmask, g["gu"][jnp.clip(kidx, 0, B - 1)], -1)
-    kinc = jnp.where(kmask, g["gcount"][jnp.clip(kidx, 0, B - 1)], 0)
+    # tiered fast path: first-touch vertices (no edge array at all — the
+    # bulk of any ingest stream) take the whole-batch allocation tier;
+    # in-window arrays compact at window width under the wide k_max budget;
+    # the rare big vertex pays the full dmax-width gather under the narrow
+    # k_big budget and hands the probe its liveness fold for free.
+    tier_a = small_ok & (gsize == 0) & (gcap == 0)
+    rest = small_ok & ~tier_a
+    dS = min(spec.probe_width, spec.dmax)
+    two_tier = dS < spec.dmax
+    tier_l = rest & (gsize > dS) if two_tier else jnp.zeros_like(rest)
+    tier_s = rest & ~tier_l
 
-    # upper bound on blocks the fast path may allocate:
-    worst = jnp.sum(jnp.where(kmask, _cdiv(jnp.minimum(gsize[jnp.clip(kidx, 0, B - 1)],
-                                                       spec.dmax), bs) * 2 +
-                              _cdiv(kinc, bs) + 2, 0))
-    pool_tight = pool.next_block + worst > nb
+    kuA = jnp.where(tier_a, g["gu"], -1)
+    kincA = jnp.where(tier_a, g["gcount"], 0)
+    base_log = spec.buf_blocks if spec.policy == "sorted" else 1
+    worstA = jnp.sum(jnp.where(tier_a, jnp.maximum(_cdiv(kincA, bs),
+                                                   base_log), 0))
+
+    def _tier(mask, k_budget):
+        kidx = jnp.nonzero(mask, size=k_budget, fill_value=B)[0]
+        kmask = kidx < B
+        kc = jnp.clip(kidx, 0, B - 1)
+        ku = jnp.where(kmask, g["gu"][kc], -1)
+        kinc = jnp.where(kmask, g["gcount"][kc], 0)
+        truncated = jnp.sum(mask.astype(jnp.int32)) > k_budget
+        # upper bound on blocks this tier may allocate:
+        worst = jnp.sum(jnp.where(kmask,
+                                  _cdiv(jnp.minimum(gsize[kc], spec.dmax),
+                                        bs) * 2 + _cdiv(kinc, bs) + 2, 0))
+        return ku, kmask, kinc, truncated, worst
+
+    kuS, kmS, kincS, truncS, worstS = _tier(tier_s, spec.k_max)
+    kuL, kmL, kincL, truncL, worstL = _tier(tier_l, spec.k_big)
+    truncated = truncS | truncL
+    pool_tight = pool.next_block + worstA + worstS + worstL > nb
     half_garbage = pool.garbage > (nb * bs) // 2
     do_defrag = jumbo | truncated | pool_tight | half_garbage
 
     incoming_vec = jnp.zeros((n_cap,), jnp.int32).at[
         jnp.where(g["gvalid"], g["gu"], n_cap)].add(g["gcount"], mode="drop")
 
+    KF = spec.k_big
+    Ww = _fold_words(n_cap)
+
     def _defrag_path(args):
         pool, vt = args
-        return defrag(spec, pool, vt, incoming_vec)
+        pool, vt = defrag(spec, pool, vt, incoming_vec)
+        # defrag resynchronizes live_m exactly but rebuilds EVERY vertex, so
+        # there is no per-vertex fold to hand the probe (over-window vertices
+        # in a defrag batch flag dirty instead)
+        return (pool, vt, jnp.full((KF,), -1, jnp.int32),
+                jnp.zeros((KF, Ww), jnp.uint32))
 
     def _fast_path(args):
         pool, vt = args
-        return _compact_vertices(spec, pool, vt, ku, kmask & ~do_defrag, kinc)
+        live = ~do_defrag
+        pool, vt = _alloc_extents(spec, pool, vt, kuA, tier_a & live, kincA)
+        pool, vt, _, _ = _compact_vertices(spec, pool, vt, kuS, kmS & live,
+                                           kincS, dS, fold=False)
+        if not two_tier:
+            return (pool, vt, jnp.full((KF,), -1, jnp.int32),
+                    jnp.zeros((KF, Ww), jnp.uint32))
+        pool, vt, fku, fbm = _compact_vertices(spec, pool, vt, kuL,
+                                               kmL & live, kincL, spec.dmax,
+                                               fold=True)
+        return pool, vt, fku, fbm
 
-    pool, vt = jax.lax.cond(do_defrag, _defrag_path, _fast_path, (pool, vt))
+    pool, vt, fold_ku, fold_bitmap = jax.lax.cond(
+        do_defrag, _defrag_path, _fast_path, (pool, vt))
 
     # ---- append every op at size + rank (log append, O(1) per op) ----
     order = g["order"]
@@ -465,12 +642,17 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     # its pre-batch liveness is probed against u's current entries (last-
     # writer-wins by timestamp — the same rule the snapshot applies), so
     #   delta = Σ_pairs applied(last op) · [(w_last != 0) − was_live]
-    # keeps ``live_m`` exact without ever rebuilding a CSR. Drops make the
-    # counter unreliable (an earlier op of the pair may have landed): flag
-    # dirty and let the next defrag / host recount resynchronize. The probe
-    # scans up to ``dmax`` entries per owner; a probed vertex whose array is
-    # LARGER than the window could hide the pair's newest entry, so that
-    # case flags dirty too instead of silently drifting.
+    # keeps ``live_m`` exact without ever rebuilding a CSR. Probe sources, in
+    # order of preference:
+    #   1. the compaction FOLD — vertices compacted this batch already paid a
+    #      (K, dmax) gather, whose deduped live set is returned as a bitmap,
+    #      so their pairs are exact at any degree;
+    #   2. a bounded-width window (``probe_width`` ≪ dmax) over the owner's
+    #      entries — exact while the array fits the window; an over-window
+    #      un-folded vertex could hide the pair's newest entry, so it flags
+    #      the counter dirty instead of silently drifting.
+    # Drops also make the counter unreliable (an earlier op of the pair may
+    # have landed): dirty, resynchronized by the next defrag / host recount.
     op_ok_orig = jnp.zeros((B,), bool).at[order].set(op_ok)
     pu = jnp.where(valid, u, INT_MAX)
     pv = jnp.where(valid, v, INT_MAX)
@@ -480,22 +662,51 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     nu = jnp.concatenate([u2[1:], jnp.full((1,), -2, u2.dtype)])
     nv = jnp.concatenate([v2[1:], jnp.full((1,), -2, v2.dtype)])
     pair_last = ((u2 != nu) | (v2 != nv)) & (u2 < INT_MAX)
-    d_e, w_e, t_e, p_size = _gather_vertex_entries(
-        spec, pool, vt, jnp.where(pair_last, u2, -1), spec.dmax)
-    t_match = jnp.where(d_e == v2[:, None], t_e, 0)  # clock starts at 1
-    newest = jnp.argmax(t_match, axis=1)
-    was_live = (jnp.max(t_match, axis=1) > 0) & \
-        (w_e[jnp.arange(B), newest] != 0)
-    delta = jnp.sum(jnp.where(pair_last & ok2,
-                              (w2 != 0).astype(jnp.int32) -
-                              was_live.astype(jnp.int32), 0))
-    probe_blind = jnp.any(pair_last & (p_size > spec.dmax))
+
+    u2c = jnp.clip(u2, 0, n_cap - 1)
+    v2c = jnp.clip(v2, 0, n_cap - 1)
+    k_of = jnp.full((n_cap + 1,), -1, jnp.int32).at[
+        jnp.where(fold_ku >= 0, fold_ku, n_cap)].set(
+            jnp.arange(KF, dtype=jnp.int32), mode="drop")[:n_cap]
+    krow = jnp.where(pair_last, k_of[u2c], -1)
+    fold_hit = krow >= 0
+    fw = fold_bitmap[jnp.clip(krow, 0, KF - 1), v2c >> 5]
+    fold_live = ((fw >> (v2c & 31).astype(jnp.uint32)) & 1) == 1
 
     sv = v[order]
     sw_ = w[order]
     sts = ts[order]
     tgt_blk = jnp.where(op_ok, start + slot // bs, nb)
-    pool = _scatter_entries(pool, tgt_blk, slot % bs, op_ok, sv, sw_, sts)
+
+    probe_u = jnp.where(pair_last & ~fold_hit, u2, -1)
+    use_pallas = spec.append_impl == "pallas" or (
+        spec.append_impl == "auto" and kops.default_impl() == "pallas")
+    if use_pallas:
+        # fused append: slot scatter + full-extent last-writer probe in one
+        # VMEM-resident pass per pool tile — exact liveness, never blind
+        p_start = jnp.where(probe_u >= 0, vt.start_block[u2c], -1)
+        p_sz = jnp.where(probe_u >= 0, vt.size[u2c], 0)
+        p_v = jnp.where(probe_u >= 0, v2, -1)
+        nd, nw, nt, win_was_live = kops.append_edges(
+            pool.dst, pool.weight, pool.ts, tgt_blk, slot % bs, op_ok,
+            sv, sw_, sts, p_start, p_sz, p_v)
+        pool = pool._replace(dst=nd, weight=nw, ts=nt)
+        probe_blind = jnp.zeros((), bool)
+    else:
+        Wp = min(spec.probe_width, spec.dmax)
+        d_e, w_e, t_e, p_sz = _gather_vertex_entries(spec, pool, vt,
+                                                     probe_u, Wp)
+        t_match = jnp.where(d_e == v2[:, None], t_e, 0)  # clock starts at 1
+        newest = jnp.argmax(t_match, axis=1)
+        win_was_live = (jnp.max(t_match, axis=1) > 0) & \
+            (w_e[jnp.arange(B), newest] != 0)
+        probe_blind = jnp.any((probe_u >= 0) & (p_sz > Wp))
+        pool = _scatter_entries(pool, tgt_blk, slot % bs, op_ok, sv, sw_, sts)
+
+    was_live = jnp.where(fold_hit, fold_live, win_was_live)
+    delta = jnp.sum(jnp.where(pair_last & ok2,
+                              (w2 != 0).astype(jnp.int32) -
+                              was_live.astype(jnp.int32), 0))
 
     # size += written count per group
     wrote = op_ok.astype(jnp.int32)

@@ -186,6 +186,9 @@ class RadixGraph:
     dmax: int = 4096
     batch: int = 4096          # padded op-batch size
     undirected: bool = False
+    probe_width: int = 256     # live-edge probe window (entries per pair)
+    k_big: int = 16            # per-batch full-width (dmax) compaction budget
+    append_impl: str = "auto"  # 'ref' scatter+window probe | 'pallas' fused
     compact_impl: str = "auto"
     capacity_factor: Optional[float] = None
     policy: str = "snaplog"    # 'snaplog' (paper) | 'grow' | 'sorted' baselines
@@ -203,6 +206,9 @@ class RadixGraph:
         nb = self.pool_blocks or max(64, (8 * self.n_max) // self.block_size)
         self.pool_spec = ep.PoolSpec(n_blocks=nb, block_size=self.block_size,
                                      k_max=self.k_max, dmax=self.dmax,
+                                     probe_width=self.probe_width,
+                                     k_big=self.k_big,
+                                     append_impl=self.append_impl,
                                      compact_impl=self.compact_impl,
                                      policy=self.policy,
                                      buf_blocks=self.buf_blocks)

@@ -101,8 +101,79 @@ def _scatter_rows(x: jnp.ndarray, tgt: jnp.ndarray, n_rows: int, fill):
     return out.at[tgt].set(x, mode="drop")
 
 
+# --------------------------------------------------------------------------
+# frontier-compacted exchange
+#
+# The dense exchanges below move ``n_shards x n_cap`` buffers per round even
+# when only a handful of rows carry data (sparse BFS frontiers, incremental
+# vertex syncs). The compacted variant routes only the masked rows into
+# count-prefixed buckets of a static ``budget`` rows per destination shard;
+# a replicated psum decides OVERFLOW up front, and the caller conds into the
+# dense path for that round, so results are bit-exact either way.
+# --------------------------------------------------------------------------
+
+def _route_overflow(owner, mask, n: int, budget: int, axis: str):
+    """Replicated: does any shard route > budget rows to one destination?"""
+    counts = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(mask, owner, n)].add(1, mode="drop")
+    over = jnp.any(counts > budget).astype(jnp.int32)
+    return jax.lax.psum(over, axis) > 0
+
+
+def _route_dense(owner, mask, payload, n: int, cap: int, a2a):
+    """Lossless dense route: bucket capacity ``cap`` rows per destination,
+    validity as a trailing flag column. Returns (rows (n*cap, C), valid)."""
+    C = payload.shape[1]
+    slot, ok = _bucket_slots(owner, mask, cap)
+    p = jnp.concatenate([payload, ok.astype(jnp.uint32)[:, None]], axis=1)
+    buf = _scatter_rows(p, jnp.where(ok, slot, n * cap), n * cap, 0)
+    r = a2a(buf.reshape(n, cap, C + 1)).reshape(n * cap, C + 1)
+    return r[:, :C], r[:, C] == 1
+
+
+def _route_compact(owner, mask, payload, n: int, budget: int, a2a):
+    """Count-prefixed compacted route: per destination shard one header row
+    (its [0] word = row count) + ``budget`` data rows. The caller must have
+    established via ``_route_overflow`` that no bucket spills.
+    Returns (rows (n*budget, C), valid)."""
+    C = payload.shape[1]
+    stride = budget + 1
+    slot, ok = _bucket_slots(owner, mask, budget)
+    # data row at owner*stride + 1 + rank; slot//budget == owner for ok rows
+    tgt = jnp.where(ok, slot + slot // budget + 1, n * stride)
+    counts = jnp.zeros((n,), jnp.uint32).at[
+        jnp.where(ok, owner, n)].add(1, mode="drop")
+    buf = jnp.zeros((n * stride, C), jnp.uint32).at[tgt].set(
+        payload.astype(jnp.uint32), mode="drop")
+    buf = buf.at[jnp.arange(n) * stride, 0].set(counts)
+    r = a2a(buf.reshape(n, stride, C))
+    cnt = r[:, 0, 0].astype(jnp.int32)
+    rows = r[:, 1:, :].reshape(n * budget, C)
+    valid = (jnp.arange(budget, dtype=jnp.int32)[None, :] <
+             cnt[:, None]).reshape(-1)
+    return rows, valid
+
+
+def _pack_qbits(b: jnp.ndarray) -> jnp.ndarray:
+    """(R, Q) bool -> (R, ceil(Q/32)) uint32 word matrix (bit q of word
+    q//32). Distinct powers of two make the sum an OR."""
+    R, Q = b.shape
+    QW = (Q + 31) // 32
+    bp = jnp.pad(b, ((0, 0), (0, QW * 32 - Q))).reshape(R, QW, 32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bp.astype(jnp.uint32) * weights[None, None, :], axis=-1)
+
+
+def _unpack_qbits(words: jnp.ndarray, Q: int) -> jnp.ndarray:
+    R, QW = words.shape
+    bits = (words[:, :, None] >>
+            jnp.arange(32, dtype=jnp.uint32)[None, None, :]) & 1
+    return bits.reshape(R, QW * 32)[:, :Q] == 1
+
+
 def make_apply_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
-                     pack: bool = True, capacity_factor: float = 1.0):
+                     pack: bool = True, capacity_factor: float = 1.0,
+                     route_budget: Optional[int] = None):
     """Build ``apply(state, src_keys, dst_keys, w, mask) -> (state, dropped)``.
 
     Inputs are GLOBAL batches: (B, 2) uint32 keys, (B,) f32 weights (0 =
@@ -110,6 +181,13 @@ def make_apply_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     is a ``make_sharded_state`` pytree. ``dropped`` is int32[n_shards] —
     per-shard refused ops (routing overflow when capacity_factor < 1, vertex
     table / pool exhaustion otherwise).
+
+    ``route_budget`` compacts the op exchange: ops ride count-prefixed
+    buckets of that many rows per destination shard (cutting collective
+    bytes when the hash spread is even), falling back to the dense lossless
+    route — still applied through the SAME pure transition — whenever a
+    bucket would spill. Lossless either way, so ``dropped`` keeps meaning
+    capacity refusals only.
     """
     n = int(mesh.shape[axis])
 
@@ -118,6 +196,27 @@ def make_apply_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         Bl = sk.shape[0]
         cap = max(1, int(round(Bl * capacity_factor)))
         owner = shard_of_keys(sk, n)
+        a2a_ = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                 split_axis=0, concat_axis=0)
+        if route_budget is not None:
+            payload = jnp.stack(
+                [sk[:, 0], sk[:, 1], dk[:, 0], dk[:, 1],
+                 jax.lax.bitcast_convert_type(w, jnp.uint32)], axis=-1)
+
+            def apply_rows(rows, valid):
+                rw = jax.lax.bitcast_convert_type(rows[:, 4], jnp.float32)
+                return rg.step_update_edges(sspec, pspec, g, rows[:, 0:2],
+                                            rows[:, 2:4], rw, valid)
+
+            ovf = _route_overflow(owner, mask, n, route_budget, axis)
+            g2, dropped = jax.lax.cond(
+                ovf,
+                lambda _: apply_rows(*_route_dense(owner, mask, payload, n,
+                                                   Bl, a2a_)),
+                lambda _: apply_rows(*_route_compact(owner, mask, payload,
+                                                     n, route_budget, a2a_)),
+                None)
+            return (jax.tree.map(lambda x: x[None], g2), dropped[None])
         slot, ok = _bucket_slots(owner, mask, cap)
         route_drop = jnp.sum((mask & ~ok).astype(jnp.int32))
         NC = n * cap
@@ -162,19 +261,32 @@ def make_apply_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
 
 
 def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
-                     k: int = 1, read_ts: Optional[int] = None):
+                     k: int = 1, read_ts: Optional[int] = None,
+                     m_cap: Optional[int] = None,
+                     frontier_budget: Optional[int] = None):
     """Build ``khop(state, query_keys) -> int32[Q]``: live (deduplicated)
-    k-hop neighbourhood counts for arbitrary query keys, each answered by the
-    key's owner shard (0 for absent vertices). Queries are routed with the
-    same hash partition as updates; answers return on a second all_to_all in
-    request order. Currently k == 1 (degree); deeper hops route frontiers
-    recursively and are not implemented yet."""
-    if k != 1:
-        raise NotImplementedError("k-hop routing beyond 1 hop (degree) "
-                                  "requires frontier re-routing rounds")
-    n = int(mesh.shape[axis])
+    k-hop neighbourhood counts for arbitrary query keys. Queries are routed
+    with the same hash partition as updates.
 
-    def body(state, qk):
+    k == 1 answers out-degree straight off the owner's edge array (0 for
+    absent vertices, self-loops count) with a route + return all_to_all.
+
+    k in (2, 3) runs BOUNDED frontier rounds over per-shard CSR snapshots
+    (requires ``m_cap`` and a vertex-SYNCED state): every round each shard
+    expands all queries' frontiers through its local CSR, discoveries ride
+    ONE exchange as (id, query-bitmask-words) rows — compacted under
+    ``frontier_budget`` with dense fallback — and owners dedup/mark them.
+    The count is Σ visited owner rows (psum-replicated) minus the source,
+    matching ``analytics.khop``: distinct vertices within <= k hops,
+    source excluded; 0 for absent sources."""
+    n = int(mesh.shape[axis])
+    if k not in (1, 2, 3):
+        raise NotImplementedError("khop counts support k <= 3 (bounded "
+                                  "frontier rounds)")
+    if k > 1 and m_cap is None:
+        raise ValueError("k >= 2 requires m_cap for the CSR snapshot")
+
+    def body_degree(state, qk):
         g = jax.tree.map(lambda x: x[0], state)
         Ql = qk.shape[0]
         owner = shard_of_keys(qk, n)
@@ -188,6 +300,75 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         back = a2a(cnt.reshape(n, Ql)).reshape(-1)
         return back[slot]
 
+    def body_khop(state, qk):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        Ql = qk.shape[0]
+        Qtot = n * Ql
+        QW = (Qtot + 31) // 32
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, read_ts)
+        edges = alg.csr_edges(snap)
+        my, rowlive, owner, _mine = _row_meta(sspec, g, n, axis)
+
+        # route queries to their owner shards (source rows live there). The
+        # slot is (owner, source-local index) — NOT a bucket rank — so the
+        # receiver-side position (source shard, index) names each query
+        # GLOBALLY: every shard's visited/frontier bit q means the same
+        # query, which the final psum relies on.
+        qowner = shard_of_keys(qk, n)
+        idx = jnp.arange(Ql, dtype=jnp.int32)
+        # a validity column rides along: an unrouted slot holds key (0, 0),
+        # which would otherwise alias a real vertex id 0 and seed its
+        # neighborhood into the psum'd counts of the query sharing the slot
+        qpay = jnp.concatenate([qk, jnp.ones((Ql, 1), jnp.uint32)], axis=1)
+        buf = _scatter_rows(qpay, qowner * Ql + idx, Qtot, 0)
+        recv = a2a(buf.reshape(n, Ql, 3)).reshape(Qtot, 3)
+        roff = jnp.where(recv[:, 2] == 1,
+                         sort_mod.lookup(sspec, g.sort, recv[:, 0:2]), -1)
+        qidx = jnp.arange(Qtot, dtype=jnp.int32)
+        visited = jnp.zeros((Qtot, n_cap + 1), bool).at[
+            qidx, jnp.where(roff >= 0, roff, n_cap)].set(True)[:, :n_cap]
+        frontier = visited
+
+        payload_ids = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
+
+        def mark(rows, valid):
+            ro = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
+            okr = valid & (ro >= 0)
+            flags = _unpack_qbits(rows[:, 2:], Qtot) & okr[:, None]
+            hit = jnp.zeros((n_cap + 1, Qtot), bool).at[
+                jnp.where(okr, ro, n_cap)].max(flags)
+            return hit[:n_cap].T    # (Qtot, n_cap), owner rows only
+
+        for _hop in range(k):
+            exp = jax.vmap(lambda f: alg.bfs_expand(snap, f, edges))(frontier)
+            qwords = _pack_qbits(exp.T)            # (n_cap, QW)
+            mask_rows = rowlive & jnp.any(exp, axis=0)
+            payload = jnp.concatenate([payload_ids, qwords], axis=1)
+            if frontier_budget is None:
+                hit = mark(*_route_dense(owner, mask_rows, payload, n,
+                                         n_cap, a2a))
+            else:
+                ovf = _route_overflow(owner, mask_rows, n, frontier_budget,
+                                      axis)
+                hit = jax.lax.cond(
+                    ovf,
+                    lambda _: mark(*_route_dense(owner, mask_rows, payload,
+                                                 n, n_cap, a2a)),
+                    lambda _: mark(*_route_compact(owner, mask_rows, payload,
+                                                   n, frontier_budget, a2a)),
+                    None)
+            frontier = hit & ~visited
+            visited = visited | frontier
+
+        counts = jax.lax.psum(jnp.sum(visited.astype(jnp.int32), axis=1),
+                              axis)
+        counts = jnp.maximum(counts - 1, 0)  # drop the source; absent -> 0
+        return counts[my * Ql + idx]         # psum-replicated: no return hop
+
+    body = body_degree if k == 1 else body_khop
     sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
                         out_specs=P(axis), check_rep=False)
 
@@ -218,32 +399,57 @@ def _row_meta(sspec, g: GraphState, n: int, axis: str):
     return my, rowlive, owner, rowlive & (owner == my)
 
 
-def make_sync_vertices(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str):
+def make_sync_vertices(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                       budget: Optional[int] = None,
+                       incremental: bool = False):
     """Build ``sync(state) -> state``: every live local row's vertex ID is
     routed to its hash-owner shard and locate-or-inserted there, so each
     vertex gains an owner row even if it only ever appeared as an edge
-    destination. Idempotent; run once before distributed analytics."""
+    destination. Idempotent; run once before distributed analytics.
+
+    ``incremental=True`` builds ``sync(state, prev_rows) -> state`` instead:
+    only rows with index >= ``prev_rows[shard]`` (i.e. created since the
+    caller last synced — valid while vertex rows are never recycled, which
+    holds for delete-free services) are exchanged, so steady-state syncs
+    cost O(new vertices). With ``budget`` set, the exchange ships
+    count-prefixed compacted buckets of that many rows per destination and
+    falls back to the dense lossless route when a bucket would spill."""
     n = int(mesh.shape[axis])
 
-    def body(state):
+    def body(state, *prev):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
         rowlive = g.vt.del_time == 0
+        if incremental:
+            prev_rows = prev[0][0]
+            rowlive = rowlive & (jnp.arange(n_cap, dtype=jnp.int32) >=
+                                 prev_rows)
         owner = shard_of_keys(g.vt.ids, n)
-        slot, ok = _bucket_slots(owner, rowlive, n_cap)
-        NC = n * n_cap
-        payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
-                             ok.astype(jnp.uint32)], axis=-1)
-        buf = _scatter_rows(payload, jnp.where(ok, slot, NC), NC, 0)
         a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
                                 split_axis=0, concat_axis=0)
-        r = a2a(buf.reshape(n, n_cap, 3)).reshape(NC, 3)
-        st, vt, _, _ = vt_mod.ensure_vertices(sspec, g.sort, g.vt,
-                                              r[:, 0:2], r[:, 2] == 1)
-        g = GraphState(st, vt, g.pool)
-        return jax.tree.map(lambda x: x[None], g)
+        payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
 
-    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+        def register(rows, valid):
+            st, vt, _, _ = vt_mod.ensure_vertices(sspec, g.sort, g.vt,
+                                                  rows[:, 0:2], valid)
+            return GraphState(st, vt, g.pool)
+
+        if budget is None:
+            g2 = register(*_route_dense(owner, rowlive, payload, n, n_cap,
+                                        a2a))
+        else:
+            ovf = _route_overflow(owner, rowlive, n, budget, axis)
+            g2 = jax.lax.cond(
+                ovf,
+                lambda _: register(*_route_dense(owner, rowlive, payload, n,
+                                                 n_cap, a2a)),
+                lambda _: register(*_route_compact(owner, rowlive, payload,
+                                                   n, budget, a2a)),
+                None)
+        return jax.tree.map(lambda x: x[None], g2)
+
+    in_specs = (P(axis),) + ((P(axis),) if incremental else ())
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
                         out_specs=P(axis), check_rep=False)
     return sharded
 
@@ -265,25 +471,51 @@ def make_snapshot(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
 
 
 def make_bfs(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
-             m_cap: int, max_iters: int = 32):
+             m_cap: int, max_iters: int = 32,
+             frontier_budget: Optional[int] = None):
     """Build ``bfs(state, source_key) -> int32[n_shards, n_cap]`` — level-
     synchronous distributed BFS. Per level each shard expands its LOCAL CSR
     (``analytics.bfs_expand``), then newly-discovered row IDs are exchanged
     to their owner shards, which mark depth and seed the next frontier.
     Depths are authoritative at owner rows (-1 unreachable); stub rows may
     record the level their shard first saw the vertex. Run on a
-    vertex-synced state (``make_sync_vertices``)."""
+    vertex-synced state (``make_sync_vertices``).
+
+    ``frontier_budget`` compacts the per-level exchange: discoveries ship in
+    count-prefixed buckets of that many rows per destination shard (dense
+    rounds fall back to the lossless n_cap route, decided by a replicated
+    psum per level, so depths stay bit-exact)."""
     n = int(mesh.shape[axis])
 
     def body(state, source_key):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
-        NC = n * n_cap
         snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
         edges = alg.csr_edges(snap)   # loop-invariant: built once, not per level
         my, rowlive, owner, _mine = _row_meta(sspec, g, n, axis)
         a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
                                 split_axis=0, concat_axis=0)
+        payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
+
+        def mark_hits(rows, valid):
+            roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
+            seen = valid & (roff >= 0)
+            return jnp.zeros((n_cap + 1,), bool).at[
+                jnp.where(seen, roff, n_cap)].max(True)[:n_cap]
+
+        def exchange(new_local):
+            if frontier_budget is None:
+                return mark_hits(*_route_dense(owner, new_local, payload, n,
+                                               n_cap, a2a))
+            ovf = _route_overflow(owner, new_local, n, frontier_budget, axis)
+            return jax.lax.cond(
+                ovf,
+                lambda _: mark_hits(*_route_dense(owner, new_local, payload,
+                                                  n, n_cap, a2a)),
+                lambda _: mark_hits(*_route_compact(owner, new_local,
+                                                    payload, n,
+                                                    frontier_budget, a2a)),
+                None)
 
         off0 = sort_mod.lookup(sspec, g.sort, source_key[None, :])[0]
         row = jnp.arange(n_cap, dtype=jnp.int32)
@@ -301,15 +533,7 @@ def make_bfs(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
             # stub rows are marked locally (each row notifies at most once);
             # owner rows are marked via the exchange below, which also
             # dedups discoveries arriving from several shards at once
-            slot, ok = _bucket_slots(owner, new_local, n_cap)
-            payload = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
-                                 ok.astype(jnp.uint32)], axis=-1)
-            buf = _scatter_rows(payload, jnp.where(ok, slot, NC), NC, 0)
-            r = a2a(buf.reshape(n, n_cap, 3)).reshape(NC, 3)
-            roff = sort_mod.lookup(sspec, g.sort, r[:, 0:2])
-            seen = (r[:, 2] == 1) & (roff >= 0)
-            hit = jnp.zeros((n_cap + 1,), bool).at[
-                jnp.where(seen, roff, n_cap)].max(True)[:n_cap]
+            hit = exchange(new_local)
             depth = jnp.where(new_local & (owner != my), it + 1, depth)
             nxt = hit & (depth < 0)
             depth = jnp.where(nxt, it + 1, depth)
@@ -326,13 +550,20 @@ def make_bfs(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
 
 
 def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
-                  m_cap: int, iters: int = 20, damping: float = 0.85):
+                  m_cap: int, iters: int = 20, damping: float = 0.85,
+                  frontier_budget: Optional[int] = None):
     """Build ``pr(state) -> float32[n_shards, n_cap]`` — distributed
     PageRank. Ranks live at owner rows; per iteration each shard scatters
     contributions along its local CSR (``analytics.pagerank_scatter``) and
     routes every live row's accumulated inflow back to the row's owner over
     one all_to_all (the combine phase). Dangling mass and the active count
-    are psums over owner rows. Run on a vertex-synced state."""
+    are psums over owner rows. Run on a vertex-synced state.
+
+    The inflow route is data-independent (every live row -> its owner), so
+    with ``frontier_budget`` the whole run compacts when the live rows fit
+    the budget (one replicated psum up front; otherwise the dense route runs
+    unchanged). Per-target add order is preserved, so ranks match the dense
+    path bit-for-bit."""
     n = int(mesh.shape[axis])
 
     def body(state):
@@ -349,31 +580,59 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         n_act = jnp.maximum(jax.lax.psum(
             jnp.sum(mine.astype(jnp.float32)), axis), 1.0)
         pr0 = jnp.where(mine, 1.0 / n_act, 0.0)
+        keys2 = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
 
-        # the inflow routing is data-independent (every live row -> its
-        # owner): exchange the keys once, reuse the slots every iteration
-        slot, ok = _bucket_slots(owner, rowlive, n_cap)
-        keybuf = _scatter_rows(
-            jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1],
-                       ok.astype(jnp.uint32)], axis=-1),
-            jnp.where(ok, slot, NC), NC, 0)
-        rk = a2a(keybuf.reshape(n, n_cap, 3)).reshape(NC, 3)
-        roff = sort_mod.lookup(sspec, g.sort, rk[:, 0:2])
-        rtgt = jnp.where((rk[:, 2] == 1) & (roff >= 0), roff, n_cap)
+        def iterate(rtgt, value_route):
+            """Key slots exchanged once; per iteration only values move."""
+            def step(pr, _):
+                contrib = alg.pagerank_contrib(snap, pr)
+                local_in = alg.pagerank_scatter(snap, contrib, edges)
+                rv = value_route(local_in)
+                inflow = jnp.zeros((n_cap + 1,)).at[rtgt].add(rv)[:n_cap]
+                dangling = jax.lax.psum(
+                    jnp.sum(jnp.where(mine & (deg == 0), pr, 0.0)), axis)
+                pr = jnp.where(mine, (1 - damping) / n_act +
+                               damping * (inflow + dangling / n_act), 0.0)
+                return pr, None
 
-        def step(pr, _):
-            contrib = alg.pagerank_contrib(snap, pr)
-            local_in = alg.pagerank_scatter(snap, contrib, edges)
-            vbuf = _scatter_rows(local_in, jnp.where(ok, slot, NC), NC, 0.0)
-            rv = a2a(vbuf.reshape(n, n_cap)).reshape(NC)
-            inflow = jnp.zeros((n_cap + 1,)).at[rtgt].add(rv)[:n_cap]
-            dangling = jax.lax.psum(
-                jnp.sum(jnp.where(mine & (deg == 0), pr, 0.0)), axis)
-            pr = jnp.where(mine, (1 - damping) / n_act +
-                           damping * (inflow + dangling / n_act), 0.0)
-            return pr, None
+            pr, _ = jax.lax.scan(step, pr0, None, length=iters)
+            return pr
 
-        pr, _ = jax.lax.scan(step, pr0, None, length=iters)
+        def dense_impl(_):
+            rows, valid = _route_dense(owner, rowlive, keys2, n, n_cap, a2a)
+            roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
+            rtgt = jnp.where(valid & (roff >= 0), roff, n_cap)
+            slot, ok = _bucket_slots(owner, rowlive, n_cap)
+
+            def route_vals(local_in):
+                vbuf = _scatter_rows(local_in, jnp.where(ok, slot, NC), NC,
+                                     0.0)
+                return a2a(vbuf.reshape(n, n_cap)).reshape(NC)
+
+            return iterate(rtgt, route_vals)
+
+        if frontier_budget is None:
+            return dense_impl(None)[None]
+
+        F = frontier_budget
+        stride = F + 1
+
+        def compact_impl(_):
+            rows, valid = _route_compact(owner, rowlive, keys2, n, F, a2a)
+            roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
+            rtgt = jnp.where(valid & (roff >= 0), roff, n_cap)
+            slot, ok = _bucket_slots(owner, rowlive, F)
+            tgt = jnp.where(ok, slot + slot // F + 1, n * stride)
+
+            def route_vals(local_in):
+                vbuf = jnp.zeros((n * stride,)).at[tgt].set(local_in,
+                                                            mode="drop")
+                return a2a(vbuf.reshape(n, stride))[:, 1:].reshape(n * F)
+
+            return iterate(rtgt, route_vals)
+
+        ovf = _route_overflow(owner, rowlive, n, F, axis)
+        pr = jax.lax.cond(ovf, dense_impl, compact_impl, None)
         return pr[None]
 
     sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),

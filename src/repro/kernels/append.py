@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused edge-pool append (ingest fast path).
+
+One grid step owns one tile of pool block-rows resident in VMEM and makes a
+single pass that fuses the three stages the XLA path runs separately:
+
+1. **probe** — for every distinct (owner, dst) pair of the batch, scan the
+   owner's extent rows that fall inside this tile for the pair's newest
+   entry (last-writer-wins by timestamp), accumulating (best_ts, best_w) in
+   VMEM scratch across tiles. Because appends only claim slots at/after the
+   owner's pre-batch size, probing bounded by ``psize`` commutes with the
+   writes of the same tile;
+2. **slot scatter** — land every op's (dst, weight, ts) at its claimed slot
+   (block, lane) when the slot falls inside the tile — the batched analogue
+   of the paper's ``fetch_add`` log append, one pass for all three payloads
+   instead of three XLA scatters;
+3. **liveness finalize** — after the last tile, emit ``was_live`` per pair
+   ((best_ts > 0) & (best_w != 0)), the exact pre-batch pair liveness that
+   drives the O(1) ``live_m`` counter with NO bounded-window blind spot.
+
+TPU grids are sequential, so the scratch accumulators and the revisited
+``was_live`` output window are legal (same pattern as kernels/frontier.py).
+Validated in interpret mode (CPU container) against ``ref.append_ref``,
+which itself matches the ``_scatter_entries`` + dense-probe semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["append_pallas"]
+
+
+def _kernel(dp, wp, tp, wblk, wlane, wval, wd, ww, wts, pstart, psize, pv,
+            od, ow, ot, owas, best_ts, best_w):
+    T, BS = dp.shape
+    B = wblk.shape[0]
+    pid = pl.program_id(0)
+    t0 = pid * T
+
+    @pl.when(pid == 0)
+    def _():
+        best_ts[...] = jnp.zeros_like(best_ts)
+        best_w[...] = jnp.zeros_like(best_w)
+        owas[...] = jnp.zeros_like(owas)
+
+    # ---- probe pass (pre-append tile contents) ----
+    def probe(q, _):
+        sb = pstart[q]
+        sz = psize[q]
+        v = pv[q]
+        nblk = (sz + BS - 1) // BS
+        lo = jnp.maximum(sb, t0)
+        hi = jnp.minimum(sb + nblk, t0 + T)
+        ok_q = (sb >= 0) & (v >= 0)
+
+        def row(r, _):
+            local = r - t0
+
+            def lane(j, _):
+                pos = (r - sb) * BS + j
+                d = dp[local, j]
+                t = tp[local, j]
+                hit = ok_q & (pos < sz) & (d == v) & (t > best_ts[q])
+
+                @pl.when(hit)
+                def _():
+                    best_ts[q] = t
+                    best_w[q] = wp[local, j]
+
+                return 0
+
+            jax.lax.fori_loop(0, BS, lane, 0)
+            return 0
+
+        jax.lax.fori_loop(lo, jnp.maximum(lo, hi), row, 0)
+        return 0
+
+    jax.lax.fori_loop(0, B, probe, 0)
+
+    # ---- append pass: copy tile, land this tile's slots ----
+    od[...] = dp[...]
+    ow[...] = wp[...]
+    ot[...] = tp[...]
+
+    def wr(j, _):
+        blk = wblk[j]
+
+        @pl.when((wval[j] != 0) & (blk >= t0) & (blk < t0 + T))
+        def _():
+            b = blk - t0
+            ln = wlane[j]
+            od[pl.ds(b, 1), pl.ds(ln, 1)] = wd[j][None, None]
+            ow[pl.ds(b, 1), pl.ds(ln, 1)] = ww[j][None, None]
+            ot[pl.ds(b, 1), pl.ds(ln, 1)] = wts[j][None, None]
+
+        return 0
+
+    jax.lax.fori_loop(0, B, wr, 0)
+
+    @pl.when(pid == pl.num_programs(0) - 1)
+    def _():
+        owas[...] = ((best_ts[...] > 0) &
+                     (best_w[...] != 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def append_pallas(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
+                  pstart, psize, pv, tile: int = 128,
+                  interpret: bool | None = None):
+    """Drop-in for ``ref.append_ref`` (same outputs)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    NB, BS = dst.shape
+    tile = min(tile, NB)
+    while NB % tile:
+        tile //= 2
+    B = wblk.shape[0]
+    grid = (NB // tile,)
+    ptile = pl.BlockSpec((tile, BS), lambda i: (i, 0))
+    ops = pl.BlockSpec((B,), lambda i: (0,))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[ptile, ptile, ptile] + [ops] * 9,
+        out_specs=[ptile, ptile, ptile, ops],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, BS), dst.dtype),
+            jax.ShapeDtypeStruct((NB, BS), w.dtype),
+            jax.ShapeDtypeStruct((NB, BS), ts.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B,), jnp.int32),
+                        pltpu.VMEM((B,), jnp.float32)],
+        interpret=interpret,
+    )(dst, w, ts, wblk, wlane, wval.astype(jnp.int32), wd, ww, wts,
+      pstart, psize, pv)
+    nd, nw, nt, was = out
+    return nd, nw, nt, was == 1

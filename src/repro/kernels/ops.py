@@ -21,6 +21,25 @@ except Exception:  # pragma: no cover
     pass
 
 
+def default_impl() -> str:
+    """The backend-selected kernel implementation ('ref' on CPU, 'pallas'
+    on TPU) — lets callers make the same static choice this module makes."""
+    return _DEFAULT_IMPL
+
+
+def append_edges(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
+                 pstart, psize, pv, impl: str = "auto"):
+    """Fused edge append: slot scatter of (dst, weight, ts) + pre-append
+    last-writer pair-liveness probe. See ref.append_ref."""
+    impl = _DEFAULT_IMPL if impl == "auto" else impl
+    if impl == "pallas":
+        from .append import append_pallas
+        return append_pallas(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
+                             pstart, psize, pv)
+    return _ref.append_ref(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
+                           pstart, psize, pv)
+
+
 def compact_rows(dst, w, ts, size, read_ts=None, impl: str = "auto"):
     """Batched log compaction (paper Alg. 2). See ref.compact_rows_ref."""
     impl = _DEFAULT_IMPL if impl == "auto" else impl

@@ -8,7 +8,44 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["compact_rows_ref", "sort_lookup_ref", "frontier_ref"]
+__all__ = ["compact_rows_ref", "sort_lookup_ref", "frontier_ref",
+           "append_ref"]
+
+
+def append_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,
+               wblk: jnp.ndarray, wlane: jnp.ndarray, wval: jnp.ndarray,
+               wd: jnp.ndarray, ww: jnp.ndarray, wts: jnp.ndarray,
+               pstart: jnp.ndarray, psize: jnp.ndarray, pv: jnp.ndarray):
+    """Fused-append oracle: pool scatter + pre-append last-writer probe.
+
+    Pools are (NB, BS) = (dst offsets, weights, timestamps). Per op j (B,):
+    write (wd, ww, wts)[j] at pool[wblk[j], wlane[j]] when ``wval[j]``. Per
+    probe q (B,): scan the FULL extent [pstart[q], ·) of the owning vertex
+    (occupied prefix ``psize`` entries) for destination ``pv[q]`` and report
+    whether the highest-timestamp match carries a non-NULL weight —
+    ``was_live`` of the (owner, pv) pair BEFORE this batch's appends land
+    (appends only ever claim slots at/after the pre-batch size, so probe and
+    write order commute). ``pv < 0`` disables a probe row.
+
+    Returns (dst', w', ts', was_live[B] bool).
+    """
+    NB, BS = dst.shape
+    N = NB * BS
+    e = jnp.arange(N, dtype=jnp.int32)
+    blk, lane = e // BS, e % BS
+    pos = (blk[None, :] - pstart[:, None]) * BS + lane[None, :]
+    belongs = (pstart[:, None] >= 0) & (pos >= 0) & (pos < psize[:, None])
+    match = belongs & (dst.reshape(-1)[None, :] == pv[:, None]) & \
+        (pv[:, None] >= 0)
+    tm = jnp.where(match, ts.reshape(-1)[None, :], 0)
+    best = jnp.argmax(tm, axis=1)
+    was_live = (jnp.max(tm, axis=1) > 0) & (w.reshape(-1)[best] != 0)
+
+    tb = jnp.where(wval, wblk, NB)
+    nd = dst.at[tb, wlane].set(wd, mode="drop")
+    nw = w.at[tb, wlane].set(ww, mode="drop")
+    nt = ts.at[tb, wlane].set(wts, mode="drop")
+    return nd, nw, nt, was_live
 
 
 def compact_rows_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,

@@ -62,7 +62,8 @@ def _mode_ingest(args, mesh, sspec, pspec, n):
     state_struct = jax.eval_shape(
         lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
     apply_fn = make_apply_edges(sspec, pspec, mesh, "data",
-                                pack=not args.no_pack)
+                                pack=not args.no_pack,
+                                route_budget=args.route_budget)
     fn = jax.jit(apply_fn, donate_argnums=(0,))
     t0 = time.time()
     compiled = fn.lower(
@@ -71,14 +72,15 @@ def _mode_ingest(args, mesh, sspec, pspec, n):
         jax.ShapeDtypeStruct((B, 2), jnp.uint32),
         jax.ShapeDtypeStruct((B,), jnp.float32),
         jax.ShapeDtypeStruct((B,), bool)).compile()
+    tag = ("" if not args.no_pack else "+nopack") + \
+        ("" if args.route_budget is None else f"+route{args.route_budget}")
     rec = {
         "arch": "radixgraph-ingest", "shape": f"ops{B}",
-        "mesh": f"graph{n}" + ("" if not args.no_pack else "+nopack"),
+        "mesh": f"graph{n}" + tag,
         "chips": n, "batch_ops": B,
         **_compile_stats(compiled, time.time() - t0),
     }
-    name = f"radixgraph-ingest__{n}shards" + \
-        ("" if not args.no_pack else "__nopack") + ".json"
+    name = f"radixgraph-ingest__{n}shards" + tag.replace("+", "__") + ".json"
     _record(name, rec)
     per_dev = sum(rec["collective_bytes"].values())
     print(f"[OK] graph-ingest x {n} shards (pack={not args.no_pack}): "
@@ -94,23 +96,27 @@ def _mode_analytics(args, mesh, sspec, pspec, n):
     state_struct = jax.eval_shape(
         lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
     key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    fb = args.frontier_budget
     recs = {}
     for alg_name, build, in_structs in (
             ("bfs", lambda: make_bfs(sspec, pspec, mesh, "data", m_cap,
-                                     max_iters=16),
+                                     max_iters=16, frontier_budget=fb),
              (state_struct, key_struct)),
             ("pagerank", lambda: make_pagerank(sspec, pspec, mesh, "data",
-                                               m_cap, iters=8),
+                                               m_cap, iters=8,
+                                               frontier_budget=fb),
              (state_struct,))):
         t0 = time.time()
         compiled = jax.jit(build()).lower(*in_structs).compile()
         recs[alg_name] = _compile_stats(compiled, time.time() - t0)
+    tag = "" if fb is None else f"__frontier{fb}"
     rec = {
         "arch": "radixgraph-analytics", "shape": f"mcap{m_cap}",
-        "mesh": f"graph{n}", "chips": n, "m_cap": m_cap,
+        "mesh": f"graph{n}" + ("" if fb is None else f"+frontier{fb}"),
+        "chips": n, "m_cap": m_cap, "frontier_budget": fb,
         "status": "ok", "kind": "graph", "algs": recs,
     }
-    _record(f"radixgraph-analytics__{n}shards.json", rec)
+    _record(f"radixgraph-analytics__{n}shards{tag}.json", rec)
     for a, r in recs.items():
         per_dev = sum(r["collective_bytes"].values())
         print(f"[OK] graph-{a} x {n} shards: compile {r['compile_s']:.0f}s, "
@@ -161,6 +167,11 @@ def main(argv=None):
     ap.add_argument("--batch-per-shard", type=int, default=4096)
     ap.add_argument("--n-per-shard", type=int, default=1 << 17)
     ap.add_argument("--no-pack", action="store_true")
+    ap.add_argument("--route-budget", type=int, default=None,
+                    help="compacted op-router budget (ingest mode)")
+    ap.add_argument("--frontier-budget", type=int, default=None,
+                    help="compacted frontier/inflow exchange budget "
+                         "(analytics mode)")
     args = ap.parse_args(argv)
 
     n = args.shards

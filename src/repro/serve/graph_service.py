@@ -13,6 +13,11 @@ Scheduling per ``step()``:
 
 1. **write phase** — up to ``write_batch`` queued edge ops are padded into
    one static-shape batch and applied (reuses the jit cache every step);
+   when the batch created vertices, an INCREMENTAL vertex sync (only rows
+   allocated since the last sync, compacted exchange with dense fallback)
+   registers them at their owners — so sealed epochs are always
+   analytics-ready and ``_synced_sealed`` reuses the sealed reference
+   instead of recomputing the full registration per epoch;
 2. **read phase** — up to ``query_batch`` queued queries are answered against
    the sealed epoch: degree queries ride one batched owner-routed lookup,
    BFS / PageRank run the distributed level-synchronous kernels on a lazily
@@ -80,7 +85,10 @@ class GraphQueryService:
                  seal_every: int = 1, max_pending: int = 65536,
                  m_cap: Optional[int] = None, bfs_iters: int = 32,
                  pr_iters: int = 20, damping: float = 0.85,
-                 undirected: bool = False, axis: str = "data"):
+                 undirected: bool = False, axis: str = "data",
+                 sync_incremental: bool = True,
+                 sync_budget: Optional[int] = None,
+                 frontier_budget: Optional[int] = None):
         assert write_batch % n_shards == 0 and query_batch % n_shards == 0, \
             "micro-batch sizes must be divisible by the shard count"
         from jax.sharding import AxisType
@@ -91,6 +99,7 @@ class GraphQueryService:
         self.seal_every = seal_every
         self.max_pending = max_pending
         self.undirected = undirected
+        self.sync_incremental = sync_incremental
         self.mesh = jax.make_mesh((n_shards,), (axis,),
                                   devices=jax.devices()[:n_shards],
                                   axis_types=(AxisType.Auto,))
@@ -108,12 +117,21 @@ class GraphQueryService:
                                                 self.mesh, axis))
         self._sync = jax.jit(make_sync_vertices(self.sspec, self.pspec,
                                                 self.mesh, axis))
+        if sync_budget is None:
+            # a write step creates at most 2 * write_batch rows globally
+            sync_budget = min(n_per_shard,
+                              2 * write_batch // n_shards + 64)
+        self._sync_inc = jax.jit(make_sync_vertices(
+            self.sspec, self.pspec, self.mesh, axis, budget=sync_budget,
+            incremental=True))
         self._bfs = jax.jit(make_bfs(self.sspec, self.pspec, self.mesh, axis,
-                                     m_cap, max_iters=bfs_iters))
+                                     m_cap, max_iters=bfs_iters,
+                                     frontier_budget=frontier_budget))
         self._pagerank = jax.jit(make_pagerank(self.sspec, self.pspec,
                                                self.mesh, axis,
                                                m_cap, iters=pr_iters,
-                                               damping=damping))
+                                               damping=damping,
+                                               frontier_budget=frontier_budget))
 
         # sealed read epoch (immutable pytree reference, O(1) to publish)
         self.epoch = 0
@@ -121,13 +139,20 @@ class GraphQueryService:
         self._sealed_synced = None          # lazy vertex-synced copy
         self._analytics_cache: Dict = {}    # (kind, arg) -> result, per epoch
 
+        # vertex-creation tracking for the incremental sync: rows allocated
+        # on each shard as of the last sync (vertex rows are never recycled
+        # here — the service has no vertex deletes — so growth of num_rows
+        # is exactly "vertices were created since")
+        self._synced_rows = np.zeros((n_shards,), np.int32)
+
         self._writes = collections.deque()  # (src_keys, dst_keys, w) chunks
         self.pending_writes = 0
         self._reads = collections.deque()
         self._next_ticket = 0
         self.results: Dict[int, object] = {}
         self.stats = dict(steps=0, ops_applied=0, ops_dropped=0,
-                          queries_answered=0, epochs_sealed=0)
+                          queries_answered=0, epochs_sealed=0,
+                          sync_runs=0, sync_skips=0, sync_reused=0)
 
     # ---- admission ----
     def _keys(self, ids) -> np.ndarray:
@@ -190,9 +215,32 @@ class GraphQueryService:
         sealed = int(np.asarray(self._sealed.pool.clock)[0])
         return live - sealed
 
+    def _maybe_sync_live(self):
+        """Eager incremental vertex sync, run right after a write
+        micro-batch: only rows created since the last sync are registered at
+        their owner shards (compacted exchange with dense fallback), so
+        every sealed epoch is already analytics-ready. Skipped — no
+        collective at all — when the batch created no vertices."""
+        rows = np.asarray(self.state.vt.num_rows)
+        if np.array_equal(rows, self._synced_rows):
+            self.stats["sync_skips"] += 1
+            return
+        self.state = self._sync_inc(self.state,
+                                    jnp.asarray(self._synced_rows))
+        self._synced_rows = np.asarray(self.state.vt.num_rows)
+        self.stats["sync_runs"] += 1
+
     def _synced_sealed(self):
         if self._sealed_synced is None:
-            self._sealed_synced = self._sync(self._sealed)
+            if self.sync_incremental:
+                # the write path keeps the live state registered as it goes,
+                # so sealing needs NO per-epoch recompute: the sealed
+                # reference is reused as the synced state (ROADMAP item)
+                self.stats["sync_reused"] += 1
+                self._sealed_synced = self._sealed
+            else:
+                self.stats["sync_runs"] += 1
+                self._sealed_synced = self._sync(self._sealed)
         return self._sealed_synced
 
     # ---- scheduling ----
@@ -225,6 +273,8 @@ class GraphQueryService:
                                           jnp.asarray(mask))
         self.stats["ops_applied"] += take
         self.stats["ops_dropped"] += int(np.asarray(dropped).sum())
+        if self.sync_incremental:
+            self._maybe_sync_live()
 
     def _answer_degree(self, q: Query):
         Q = self.query_batch

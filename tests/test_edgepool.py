@@ -176,6 +176,101 @@ def test_mixed_stream_undirected_interleaved_order():
     assert not g.overflowed and g.dropped_ops == 0
 
 
+# --------------------------------------------------------------------------
+# live-edge accounting on the probe-free ingest fast path
+# --------------------------------------------------------------------------
+
+live_ops_strategy = st.lists(
+    st.tuples(st.integers(0, 20), st.integers(0, 20),
+              st.sampled_from([0.0, 0.0, 1.0, 2.5, 7.0])),
+    min_size=1, max_size=120)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=live_ops_strategy, chunk=st.integers(1, 60))
+def test_live_counter_exact_on_in_window_streams(ops, chunk):
+    """Property: across mixed insert/update/delete streams applied in
+    arbitrary chunkings, ``live_m`` stays EXACT (never dirty) while every
+    touched vertex fits the probe window, and matches a full recount."""
+    g = mk(probe_width=64)
+    for lo in range(0, len(ops), chunk):
+        part = ops[lo:lo + chunk]
+        g.apply_ops(np.array([o[0] for o in part], np.uint64),
+                    np.array([o[1] for o in part], np.uint64),
+                    np.array([o[2] for o in part], np.float32))
+    oracle = {}
+    for s, d, ww in ops:
+        if ww == 0.0:
+            oracle.pop((s, d), None)
+        else:
+            oracle[(s, d)] = ww
+    assert int(g.state.pool.live_dirty) == 0
+    assert int(g.state.pool.live_m) == len(oracle)
+    assert g.num_edges == len(oracle)
+    assert g.num_edges == int(g.snapshot().m)   # vs full rebuild
+    assert not g.overflowed
+
+
+def test_bounded_probe_flags_dirty_past_window():
+    """A probed pair whose owner outgrew the probe WINDOW (and was not
+    compacted this batch) must flag the counter dirty — the newest entry
+    may sit past the window — and the recount must heal it."""
+    g = mk(probe_width=16, dmax=256)
+    g.apply_ops(np.zeros(20, np.uint64), np.arange(1, 21, dtype=np.uint64),
+                np.ones(20, np.float32))
+    assert int(g.state.pool.live_dirty) == 0    # first touch: probe size 0
+    assert g.num_edges == 20
+    # update one pair: pre-append size (20) > window (16), no compaction
+    g.apply_ops(np.zeros(1, np.uint64), np.array([5], np.uint64),
+                np.array([2.0], np.float32))
+    assert int(g.state.pool.live_dirty) == 1
+    assert g.num_edges == 20                    # recount, not 21
+    assert int(g.state.pool.live_dirty) == 0    # written back
+
+
+def test_compaction_fold_keeps_over_window_vertex_exact():
+    """A vertex past the probe window that IS compacted in the same batch
+    hands the probe its liveness fold: the counter stays exact (no dirty)
+    even though the window alone could not decide pair liveness."""
+    g = mk(probe_width=16, dmax=256)
+    g.apply_ops(np.zeros(20, np.uint64), np.arange(1, 21, dtype=np.uint64),
+                np.ones(20, np.float32))
+    # cap is now 24 (3 blocks of 8): 5 incoming ops overflow -> tier-L
+    # compaction of vertex 0 (size 20 > window 16) with fold
+    ops_d = np.array([3, 5, 21, 22, 4], np.uint64)
+    ops_w = np.array([9.0, 0.0, 1.0, 1.0, 9.0], np.float32)
+    g.apply_ops(np.zeros(5, np.uint64), ops_d, ops_w)
+    assert int(g.state.pool.live_dirty) == 0
+    # 20 - 1 delete + 2 inserts = 21, updates don't change the count
+    assert int(g.state.pool.live_m) == 21
+    assert g.num_edges == int(g.snapshot().m) == 21
+
+
+def test_pallas_append_path_matches_ref_path(rng):
+    """The fused Pallas append kernel (interpret mode) drives the same
+    graph evolution as the jnp scatter + windowed probe path — and its
+    full-extent probe never flags the counter dirty."""
+    ids = rng.integers(0, 12, (150, 2)).astype(np.uint64)
+    ws = rng.uniform(0.5, 2, 150).astype(np.float32)
+    ws[rng.random(150) < 0.3] = 0.0
+    kw = dict(n_max=64, key_bits=16, expected_n=32, batch=32,
+              pool_blocks=128, block_size=8, dmax=64, k_max=8)
+    g_ref = RadixGraph(**kw)
+    g_pal = RadixGraph(append_impl="pallas", **kw)
+    for lo in range(0, 150, 50):
+        for g in (g_ref, g_pal):
+            g.apply_ops(ids[lo:lo + 50, 0], ids[lo:lo + 50, 1],
+                        ws[lo:lo + 50])
+    assert int(g_pal.state.pool.live_dirty) == 0
+    assert g_ref.num_edges == g_pal.num_edges
+    assert np.array_equal(np.asarray(g_ref.snapshot().dst),
+                          np.asarray(g_pal.snapshot().dst))
+    for vid in range(12):
+        a = g_ref.neighbors([vid])[0]
+        b = g_pal.neighbors([vid])[0]
+        assert set(a[0].tolist()) == set(b[0].tolist())
+
+
 def test_mixed_stream_undirected_order_across_batches(rng):
     """Same-pair churn split across apply_ops calls (and batch-pad
     boundaries): the global clock must keep the interleaved directions

@@ -100,6 +100,42 @@ def test_analytics_memoized_per_epoch(served):
     assert svc.results[t2] is svc.results[t1]
 
 
+def test_sync_reused_across_epochs_without_vertex_creation(served):
+    svc, ids, src, dst, w, oracle = served
+    # analytics on the sealed epoch must NOT recompute the vertex sync:
+    # the write path keeps the live state registered incrementally
+    runs0 = svc.stats["sync_runs"]
+    svc.submit_query("pagerank")
+    svc.run()
+    reused0 = svc.stats["sync_reused"]
+    assert reused0 > 0
+    assert svc.stats["sync_runs"] == runs0
+    # churn edges between EXISTING vertices: no vertices created, so the
+    # per-step incremental sync is skipped entirely (no collective)
+    skips0 = svc.stats["sync_skips"]
+    svc.submit_update(src[:4], dst[:4], w[:4] + 1.0)
+    svc.submit_update(src[:4], dst[:4], w[:4])       # restore weights
+    svc.submit_query("pagerank")
+    svc.run()
+    assert svc.stats["sync_runs"] == runs0
+    assert svc.stats["sync_skips"] > skips0
+    assert svc.stats["sync_reused"] > reused0
+    # writes that CREATE vertices do run the incremental sync
+    known = set(int(x) for x in ids)
+    fresh = np.array([x for x in range(7, 100) if x not in known][:2],
+                     np.uint64)
+    svc.submit_update(fresh, fresh[::-1], np.ones(2, np.float32))
+    svc.run()
+    assert svc.stats["sync_runs"] == runs0 + 1
+    # and analytics on the new epoch still answer from the reused sync
+    t = svc.submit_query("bfs", source=int(fresh[0]))
+    res = svc.run()
+    assert res[t][int(fresh[1])] == 1
+    # clean up the extra edges for any later test using the fixture
+    svc.submit_update(fresh, fresh[::-1], np.zeros(2, np.float32))
+    svc.run()
+
+
 def test_backpressure():
     svc = GraphQueryService(n_shards=1, n_per_shard=512, expected_n=128,
                             pool_blocks=1024, block_size=8, dmax=128,

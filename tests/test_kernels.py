@@ -9,6 +9,7 @@ from repro.core.keys import pack_keys
 from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
 from repro.kernels import ref as R
+from repro.kernels.append import append_pallas
 from repro.kernels.compact import compact_rows_pallas
 from repro.kernels.frontier import frontier_pallas
 from repro.kernels.sort_lookup import sort_lookup_pallas
@@ -68,6 +69,33 @@ def test_sort_lookup_kernel(n, tile, rng):
                            fanout_bits=spec.fanout_bits,
                            bit_offsets=spec.bit_offsets, tile=tile)
     assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 16))
+def test_append_kernel(seed, tile):
+    """Fused append (slot scatter + pre-append last-writer probe) must match
+    the oracle bit-exactly: pool contents AND per-pair was_live."""
+    rng = np.random.default_rng(seed)
+    NB, BS, B = 32, 8, 24
+    dst = rng.integers(-1, 16, (NB, BS)).astype(np.int32)
+    w = np.round(rng.uniform(0, 2, (NB, BS))).astype(np.float32)
+    ts = (rng.permutation(NB * BS).reshape(NB, BS) + 1).astype(np.int32)
+    wblk = rng.integers(0, NB, B).astype(np.int32)
+    wlane = rng.integers(0, BS, B).astype(np.int32)
+    wval = rng.random(B) < 0.7
+    wd = rng.integers(0, 16, B).astype(np.int32)
+    ww = np.round(rng.uniform(0, 2, B)).astype(np.float32)
+    wts = (rng.permutation(B) + 1000).astype(np.int32)
+    pstart = rng.integers(-1, NB, B).astype(np.int32)
+    psize = rng.integers(0, 3 * BS, B).astype(np.int32)
+    pv = rng.integers(-1, 16, B).astype(np.int32)
+    args = tuple(map(jnp.asarray, (dst, w, ts, wblk, wlane, wval, wd, ww,
+                                   wts, pstart, psize, pv)))
+    a = R.append_ref(*args)
+    b = append_pallas(*args, tile=tile)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
 
 
 @settings(max_examples=8, deadline=None)
