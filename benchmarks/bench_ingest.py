@@ -1,15 +1,25 @@
 """Ingest fast-path throughput harness (updates/sec, fig8-style streams).
 
-Measures steady-state edge-update throughput for batched powerlaw streams on
+Measures steady-state edge-update throughput through the unified
+``repro.api.GraphStore`` front door for batched streams on
 
-* the 1-shard ``RadixGraph`` host API (jitted padded batches), and
-* the 4-shard distributed engine (subprocess with placeholder devices:
+* the 1-shard ``LocalStore`` (jitted padded batches), and
+* the 4-shard ``ShardedStore`` (subprocess with placeholder devices:
   route -> all_to_all -> apply, one fused SPMD program per batch),
 
 at a small and a large batch size, and records the numbers in
-``BENCH_ingest.json`` at the repo root.  The file keeps a ``before`` and an
-``after`` section so every PR that touches the write path has a recorded
-trajectory to beat:
+``BENCH_ingest.json`` at the repo root.  Three stream shapes:
+
+* ``insert``  — plain powerlaw inserts (the historical before/after
+  trajectory every write-path PR has to beat);
+* ``mixed``   — fig9-style insert/update/delete stream (25% tombstones,
+  powerlaw endpoints repeat, so updates occur naturally) exercising the
+  probe's delete accounting under load;
+* ``hub``     — hub-heavy stream where every batch overflows MANY
+  over-window (tier-L) vertices: with more than ``k_big`` of them the
+  fast path falls back to a global defrag (amortized-correct, recorded
+  via the pool's ``defrags`` counter), while a raised ``k_big`` keeps the
+  stream on the fast path — the knob trade the ROADMAP asks to record.
 
     PYTHONPATH=src python -m benchmarks.bench_ingest --record after
     PYTHONPATH=src python -m benchmarks.bench_ingest --smoke   # CI artifact
@@ -34,84 +44,125 @@ OUT = ROOT / "BENCH_ingest.json"
 
 # one jit cache across batch configs would need one batch size; each config
 # builds its own graph, so keep the stream modest and let compile warm out.
-FULL = dict(n_vertices=8192, n_ops=65536)
-SMOKE = dict(n_vertices=512, n_ops=4096)
+FULL = dict(n_vertices=8192, n_ops=65536, hub_n_hubs=48, hub_k_big=(16, 64))
+SMOKE = dict(n_vertices=512, n_ops=4096, hub_n_hubs=8, hub_k_big=(2, 64))
 
 
 def _throughput(n_ops: int, dt: float) -> float:
     return round(n_ops / dt, 1)
 
 
-def bench_single(n_vertices: int, n_ops: int, batch: int, seed: int = 0):
-    """1-shard ingest: batched powerlaw stream through the host API."""
-    from benchmarks.common import GRAPH_CAPS, edge_stream
-    from repro.core.radixgraph import RadixGraph
+def _mixed_weights(n: int, seed: int = 1) -> np.ndarray:
+    """fig9-style op mix: uniform weights, 25% NULL tombstones (deletes);
+    powerlaw endpoint reuse supplies the updates."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    w[rng.random(n) < 0.25] = 0.0
+    return w
 
-    src, dst, _ = edge_stream(n_vertices, n_ops + batch, "powerlaw", seed)
+
+def _hub_stream(n_vertices: int, n_ops: int, n_hubs: int, seed: int = 0):
+    """Every op's source is one of ``n_hubs`` hubs (round-robin, so each
+    batch touches every hub): hub edge arrays quickly outgrow the probe
+    window and overflow per batch — the tier-L (k_big) stress shape."""
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(2 ** 32, n_vertices, replace=False).astype(np.uint64)
+    hubs = ids[:n_hubs]
+    src = hubs[np.arange(n_ops) % n_hubs]
+    dst = ids[rng.integers(0, n_vertices, n_ops)]
+    return src, dst, ids
+
+
+def _local_store(n_vertices: int, batch: int, **over):
+    from benchmarks.common import GRAPH_CAPS
+    from repro.api import make_store
     kw = dict(GRAPH_CAPS)
     kw["batch"] = batch
-    g = RadixGraph(key_bits=32, expected_n=n_vertices, undirected=False, **kw)
-    g.add_edges(src[:batch], dst[:batch])            # compile + warm
+    kw.update(over)
+    return make_store("local", key_bits=32, expected_n=n_vertices,
+                      undirected=False, **kw)
+
+
+def bench_single(n_vertices: int, n_ops: int, batch: int, seed: int = 0,
+                 weights=None, **store_over):
+    """1-shard ingest: a batched powerlaw stream through ``LocalStore``."""
+    from benchmarks.common import edge_stream
+    from repro.api import OpBatch, ReadOp
+
+    src, dst, _ = edge_stream(n_vertices, n_ops + batch, "powerlaw", seed)
+    w = weights(n_ops + batch) if weights is not None else None
+    store = _local_store(n_vertices, batch, **store_over)
+    store.apply(OpBatch.edges(src[:batch], dst[:batch],
+                              None if w is None else w[:batch]))  # warm
     t0 = time.perf_counter()
-    g.add_edges(src[batch:], dst[batch:])
+    res = store.apply(OpBatch.edges(src[batch:], dst[batch:],
+                                    None if w is None else w[batch:]))
     dt = time.perf_counter() - t0
-    assert g.dropped_ops == 0 and not g.overflowed
+    assert res.dropped == 0 and not store.graph.overflowed
     return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
             "updates_per_s": _throughput(n_ops, dt),
-            "live_edges": int(g.num_edges)}
+            "live_edges": store.read(ReadOp("num_edges"))}
+
+
+def bench_hub(n_vertices: int, n_ops: int, batch: int, n_hubs: int,
+              k_big: int, seed: int = 0):
+    """Hub-heavy tier-L stress: same stream at two ``k_big`` budgets —
+    the small one records overflow-defrag fallbacks, the raised one stays
+    on the fast path (each unit of k_big costs one dmax-width compaction
+    row per batch)."""
+    from repro.api import OpBatch, ReadOp
+
+    src, dst, _ = _hub_stream(n_vertices, n_ops + batch, n_hubs, seed)
+    store = _local_store(n_vertices, batch, k_big=k_big)
+    store.apply(OpBatch.edges(src[:batch], dst[:batch]))          # warm
+    d0 = store.graph.num_defrags
+    t0 = time.perf_counter()
+    res = store.apply(OpBatch.edges(src[batch:], dst[batch:]))
+    dt = time.perf_counter() - t0
+    assert res.dropped == 0 and not store.graph.overflowed
+    return {"batch": batch, "ops": n_ops, "n_hubs": n_hubs,
+            "k_big": k_big, "seconds": round(dt, 3),
+            "updates_per_s": _throughput(n_ops, dt),
+            "overflow_defrags": store.graph.num_defrags - d0,
+            "live_edges": store.read(ReadOp("num_edges"))}
 
 
 def _shard_worker(n_vertices: int, n_ops: int, batch: int, n_shards: int,
-                  seed: int = 0):
+                  seed: int = 0, mixed: bool = False):
     """Runs inside the subprocess (placeholder devices already forced)."""
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import AxisType
 
     from benchmarks.common import edge_stream
-    from repro.core import edgepool as ep
-    from repro.core.keys import pack_keys
-    from repro.core.sort import SortSpec
-    from repro.core.sort_optimizer import optimize_sort
-    from repro.dist.graph_engine import make_apply_edges, make_sharded_state
+    from repro.api import OpBatch, make_store
 
-    mesh = jax.make_mesh((n_shards,), ("data",),
-                         devices=jax.devices()[:n_shards],
-                         axis_types=(AxisType.Auto,))
-    cfg = optimize_sort(max(256, n_vertices), 32, 5)
-    sspec = SortSpec.from_config(cfg, 4 * max(1024, n_vertices))
-    pspec = ep.PoolSpec(n_blocks=max(4096, 16 * n_vertices), block_size=16,
-                        k_max=256, dmax=4096)
-    state = make_sharded_state(sspec, pspec, n_shards,
-                               4 * max(1024, n_vertices))
-    apply_fn = jax.jit(make_apply_edges(sspec, pspec, mesh, "data"))
+    store = make_store(
+        "sharded", n_shards=n_shards,
+        n_per_shard=4 * max(1024, n_vertices),
+        expected_n=max(256, n_vertices),
+        pool_blocks=max(4096, 16 * n_vertices), block_size=16,
+        k_max=256, dmax=4096, batch=batch,
+        sync_incremental=False)     # measure the raw routed-apply path
 
     src, dst, _ = edge_stream(n_vertices, n_ops + batch, "powerlaw", seed)
-    sk = np.asarray(pack_keys(src, 32))
-    dk = np.asarray(pack_keys(dst, 32))
-    w = np.ones((batch,), np.float32)
-    mask = np.ones((batch,), bool)
+    w = _mixed_weights(n_ops + batch) if mixed else \
+        np.ones(n_ops + batch, np.float32)
 
-    def step(state, lo):
-        return apply_fn(state, jnp.asarray(sk[lo:lo + batch]),
-                        jnp.asarray(dk[lo:lo + batch]), jnp.asarray(w),
-                        jnp.asarray(mask))
-
-    state, dropped = step(state, 0)                  # compile + warm
-    jax.block_until_ready(state)
-    total_drop = 0
+    store.apply(OpBatch.edges(src[:batch], dst[:batch], w[:batch]))  # warm
+    jax.block_until_ready(store.state)
     t0 = time.perf_counter()
     for lo in range(batch, n_ops + batch, batch):
-        state, dropped = step(state, lo)
-        total_drop += int(np.asarray(dropped).sum())
-    jax.block_until_ready(state)
+        store.apply(OpBatch.edges(src[lo:lo + batch], dst[lo:lo + batch],
+                                  w[lo:lo + batch]))
+    jax.block_until_ready(store.state)
     dt = time.perf_counter() - t0
-    assert total_drop == 0, total_drop
+    assert store.stats["ops_dropped"] == 0, store.stats
     return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
-            "updates_per_s": _throughput(n_ops, dt), "shards": n_shards}
+            "updates_per_s": _throughput(n_ops, dt), "shards": n_shards,
+            "kind": "mixed" if mixed else "insert"}
 
 
-def bench_sharded(n_vertices: int, n_ops: int, batch: int, n_shards: int = 4):
+def bench_sharded(n_vertices: int, n_ops: int, batch: int, n_shards: int = 4,
+                  mixed: bool = False):
     """Spawn the worker under ``--xla_force_host_platform_device_count``."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -120,7 +171,7 @@ def bench_sharded(n_vertices: int, n_ops: int, batch: int, n_shards: int = 4):
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_ingest", "--_worker",
          json.dumps(dict(n_vertices=n_vertices, n_ops=n_ops, batch=batch,
-                         n_shards=n_shards))],
+                         n_shards=n_shards, mixed=mixed))],
         capture_output=True, text=True, env=env, cwd=str(ROOT), timeout=1800)
     for line in out.stdout.splitlines():
         if line.startswith("WORKER-RESULT "):
@@ -130,18 +181,35 @@ def bench_sharded(n_vertices: int, n_ops: int, batch: int, n_shards: int = 4):
 
 def run(smoke: bool = False, record: str = "after"):
     scale = SMOKE if smoke else FULL
+    nv, no = scale["n_vertices"], scale["n_ops"]
     batches = (1024, 4096)
-    results = {"one_shard": {}, "four_shard": {}}
+    results = {"one_shard": {}, "four_shard": {}, "mixed": {}, "hub": {}}
     for b in batches:
-        r = bench_single(scale["n_vertices"], scale["n_ops"], b)
+        r = bench_single(nv, no, b)
         results["one_shard"][f"B{b}"] = r
         print(f"1-shard  B={b}: {r['updates_per_s']:.0f} updates/s "
               f"({r['ops']} ops in {r['seconds']}s)")
     for b in batches:
-        r = bench_sharded(scale["n_vertices"], scale["n_ops"], b)
+        r = bench_sharded(nv, no, b)
         results["four_shard"][f"B{b}"] = r
         print(f"4-shard  B={b}: {r['updates_per_s']:.0f} updates/s "
               f"({r['ops']} ops in {r['seconds']}s)")
+    # fig9-style mixed insert/update/delete trajectory (1- and 4-shard)
+    r = bench_single(nv, no, 4096, weights=_mixed_weights)
+    results["mixed"]["one_shard_B4096"] = r
+    print(f"mixed 1-shard  B=4096: {r['updates_per_s']:.0f} updates/s "
+          f"({r['live_edges']} live edges)")
+    r = bench_sharded(nv, no, 4096, mixed=True)
+    results["mixed"]["four_shard_B4096"] = r
+    print(f"mixed 4-shard  B=4096: {r['updates_per_s']:.0f} updates/s")
+    # hub-heavy tier-L budget: small k_big falls back to defrag, raised
+    # k_big rides the fast path — record both sides of the knob
+    for kb in scale["hub_k_big"]:
+        r = bench_hub(nv, no, 4096, scale["hub_n_hubs"], kb)
+        results["hub"][f"k_big{kb}"] = r
+        print(f"hub({scale['hub_n_hubs']} hubs) k_big={kb}: "
+              f"{r['updates_per_s']:.0f} updates/s, "
+              f"{r['overflow_defrags']} overflow defrags")
 
     doc = {}
     if OUT.exists():
@@ -150,11 +218,10 @@ def run(smoke: bool = False, record: str = "after"):
     if smoke:
         # CI sanity record: never clobbers the committed full-scale
         # before/after trajectory
-        doc["smoke"] = dict(stream=dict(scale, dist="powerlaw",
-                                        kind="insert"), **results)
+        doc["smoke"] = dict(stream=dict(scale, dist="powerlaw"), **results)
     else:
         doc["scale"] = "full"
-        doc["stream"] = dict(scale, dist="powerlaw", kind="insert")
+        doc["stream"] = dict(scale, dist="powerlaw")
         doc[record] = results
     OUT.write_text(json.dumps(doc, indent=1) + "\n")
     print(f"[OK] wrote {OUT} ({'smoke' if smoke else record})")

@@ -1,12 +1,13 @@
 """Paper Fig. 11: concurrent reads & writes — through the graph query service.
 
 Thread-scaling becomes shard-scaling on the SPMD substrate, and the mixed
-workload now runs end-to-end through ``serve.graph_service``: the writer
-ingests micro-batches via the sharded engine while owner-routed degree reads
-are answered against sealed epochs (1:1 interleave, the paper's concurrent
-workload). After the stream drains, distributed BFS/PageRank answers from
-the service are validated against a single-shard ``RadixGraph`` reference —
-a mismatch raises.
+workload runs end-to-end through ``repro.api``: a ``ShardedStore`` feeds
+``serve.GraphQueryService`` (writer ingests micro-batches, owner-routed
+degree reads answer against sealed epochs, 1:1 interleave — the paper's
+concurrent workload). After the stream drains, distributed BFS/PageRank
+answers from the service are validated against a ``LocalStore`` running
+the SAME AnalyticsOps — one API, two backends, dict-equal results (a
+mismatch raises).
 
 In-process runs measure the 1-shard configuration; multi-shard points run in
 a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``:
@@ -31,10 +32,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 
 def run_one(shards: int, scale: float = 1.0, validate: bool = True):
-    import jax.numpy as jnp
-
-    from repro import analytics as A
-    from repro.core.radixgraph import RadixGraph
+    from repro.api import AnalyticsOp, OpBatch, make_store
     from repro.serve.graph_service import (GraphQueryService,
                                            drive_mixed_workload)
 
@@ -44,11 +42,11 @@ def run_one(shards: int, scale: float = 1.0, validate: bool = True):
     src, dst, ids = edge_stream(n_v, n_e, "powerlaw", seed=0)
     w = rng.uniform(0.5, 2, n_e).astype(np.float32)
 
-    svc = GraphQueryService(
-        n_shards=shards, n_per_shard=8192, expected_n=4096,
-        pool_blocks=16384, block_size=16, dmax=2048, k_max=128,
-        write_batch=1024 * shards, query_batch=256 * shards,
-        bfs_iters=32, pr_iters=20)
+    store = make_store("sharded", n_shards=shards, n_per_shard=8192,
+                       expected_n=4096, pool_blocks=16384, block_size=16,
+                       dmax=2048, k_max=128, batch=1024 * shards,
+                       query_batch=256 * shards)
+    svc = GraphQueryService(store, bfs_iters=32, pr_iters=20)
 
     qids = ids[:min(256 * shards, n_v)]
     dt, reads = drive_mixed_workload(svc, src, dst, w, qids)
@@ -61,25 +59,17 @@ def run_one(shards: int, scale: float = 1.0, validate: bool = True):
 
     bfs_ok, pr_err = True, 0.0
     if validate:
-        g = RadixGraph(n_max=4 * n_v, key_bits=32, expected_n=n_v,
-                       batch=1024, pool_blocks=32768, block_size=16,
-                       dmax=2048, k_max=128)
-        g.apply_ops(src, dst, w)
-        snap = g.snapshot()
-        off = g.lookup(ids)
-        s0 = int(g.lookup(np.array([src[0]], np.uint64))[0])
-        ref_d = np.asarray(A.bfs(snap, jnp.int32(s0)))
-        ref_pr = np.asarray(A.pagerank(snap, iters=20))
-        for i, vid in enumerate(ids):
-            if off[i] < 0:
-                # vertex never appeared in the sampled stream: it must be
-                # absent from the service's answers too
-                bfs_ok &= int(vid) not in res[tb] and int(vid) not in res[tp]
-                continue
-            if res[tb].get(int(vid), -2) != int(ref_d[int(off[i])]):
-                bfs_ok = False
-            pr_err = max(pr_err, abs(float(res[tp].get(int(vid), 0.0)) -
-                                     float(ref_pr[int(off[i])])))
+        ref = make_store("local", n_max=4 * n_v, key_bits=32,
+                         expected_n=n_v, batch=1024, pool_blocks=32768,
+                         block_size=16, dmax=2048, k_max=128)
+        ref.apply(OpBatch.edges(src, dst, w))
+        ref_d = ref.analytics(AnalyticsOp("bfs", {"source": int(src[0]),
+                                                  "max_iters": 32}))
+        ref_pr = ref.analytics(AnalyticsOp("pagerank", {"iters": 20}))
+        bfs_ok = res[tb] == ref_d       # same live-vertex keys, same depths
+        assert set(res[tp]) == set(ref_pr)
+        pr_err = max(abs(res[tp][v] - ref_pr[v]) for v in ref_pr) \
+            if ref_pr else 0.0
         assert bfs_ok, "sharded BFS diverged from single-shard reference"
         assert pr_err < 1e-4, \
             f"sharded PageRank diverged from reference (max err {pr_err})"

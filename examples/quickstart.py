@@ -1,47 +1,65 @@
-"""Quickstart: RadixGraph in 60 seconds.
+"""Quickstart: the unified GraphStore API in 60 seconds.
 
-  PYTHONPATH=src python examples/quickstart.py
+ONE driving script, TWO storage backends — the eager single-shard
+RadixGraph and the mesh-sharded engine. Only the construction config
+differs; every apply/read/analytics line below runs unchanged on both:
+
+  PYTHONPATH=src python examples/quickstart.py            # local backend
+  PYTHONPATH=src python examples/quickstart.py sharded    # 1-shard mesh
 """
+import sys
+
 import numpy as np
 
-from repro.core.radixgraph import RadixGraph
-from repro import analytics as A
-import jax.numpy as jnp
+from repro.api import AnalyticsOp, OpBatch, ReadOp, make_store
+
+CONFIGS = {
+    "local": dict(n_max=4096, key_bits=32, expected_n=1000, batch=1024,
+                  pool_blocks=16384, block_size=16, undirected=True),
+    "sharded": dict(n_shards=1, n_per_shard=4096, expected_n=1000,
+                    batch=1024, pool_blocks=16384, block_size=16,
+                    undirected=True),
+}
+backend = sys.argv[1] if len(sys.argv) > 1 else "local"
+store = make_store(backend, **CONFIGS[backend])
+print(f"backend: {store.backend}")
 
 # a dynamic graph over non-contiguous 32-bit IDs (UUID-style)
-g = RadixGraph(n_max=4096, key_bits=32, expected_n=1000, batch=1024,
-               pool_blocks=16384, block_size=16, undirected=True)
-print("SORT fanouts chosen by the optimizer:", g.config.fanout_bits)
-
 rng = np.random.default_rng(0)
 ids = rng.choice(2**32, 1000, replace=False).astype(np.uint64)
 
 # stream edge updates: inserts, weight updates, deletions — O(1) amortized
 src, dst = rng.choice(ids, 8000), rng.choice(ids, 8000)
 w = rng.uniform(0.5, 2.0, 8000).astype(np.float32)
-g.add_edges(src, dst, w)
-print(f"{g.num_vertices} vertices, {g.num_edges} edges, "
-      f"{g.memory_bytes()/2**20:.2f} MiB")
+res = store.apply(OpBatch.edges(src, dst, w))
+print(f"{store.read(ReadOp('num_vertices'))} vertices, "
+      f"{store.read(ReadOp('num_edges'))} edges "
+      f"(dropped {res.dropped})")
 
-v0 = g.checkpoint_version()                      # MVCC snapshot
-g.delete_edges(src[:4000], dst[:4000])           # tombstone appends
-g.update_edges(src[4000:5000], dst[4000:5000],
-               np.full(1000, 9.0, np.float32))   # weight updates
-print("after mixed updates:", g.num_edges, "edges")
+v0 = store.capture()                              # O(1) MVCC epoch handle
+store.apply(OpBatch.edges(src[:4000], dst[:4000],
+                          np.zeros(4000, np.float32)))   # tombstone appends
+store.apply(OpBatch.edges(src[4000:5000], dst[4000:5000],
+                          np.full(1000, 9.0, np.float32)))  # weight updates
+print("after mixed updates:", store.read(ReadOp("num_edges")), "edges")
 
-# reads: get-neighbors (compaction-style scan, O(d))
-nbr_ids, nbr_w = g.neighbors([int(ids[0])])[0]
-print(f"vertex {ids[0]} has {len(nbr_ids)} live neighbors")
+# reads: presence, degrees, get-neighbors (compaction-style scan, O(d))
+assert store.read(ReadOp("lookup", ids=ids[:4])).all()
+deg = store.read(ReadOp("degree", ids=ids[:4]))
+nbr_ids, nbr_w = store.read(ReadOp("neighbors", ids=ids[:1]))[0]
+print(f"vertex {ids[0]} has {len(nbr_ids)} live neighbors "
+      f"(degrees {deg.tolist()})")
 
-# time travel: read the graph as of version v0
-old_ids, _ = g.neighbors([int(ids[0])], read_ts=v0)[0]
-print(f"...and had {len(old_ids)} at version {v0}")
+# time travel: the captured epoch still answers — functional states ARE
+# the paper's MVCC versioned arrays
+old_deg = store.read(ReadOp("degree", ids=ids[:1]), at=v0)[0]
+print(f"...and had {old_deg} at the captured epoch")
 
-# analytics on a consistent snapshot (CSR over the edge chain)
-snap = g.snapshot()
-off = g.lookup(ids[:1])
-pr = A.pagerank(snap, iters=20)
-depth = A.bfs(snap, jnp.int32(int(off[0])))
-print(f"pagerank sum={float(jnp.sum(pr)):.3f}, "
-      f"BFS reached {int(jnp.sum(depth >= 0))} vertices")
+# analytics through the registry: identical results on either backend
+pr = store.analytics(AnalyticsOp("pagerank", {"iters": 20}))
+depth = store.analytics(AnalyticsOp("bfs", {"source": int(src[0])}))
+comp = store.analytics(AnalyticsOp("wcc"))
+print(f"pagerank sum={sum(pr.values()):.3f}, "
+      f"BFS reached {sum(1 for d in depth.values() if d >= 0)} vertices, "
+      f"{len(set(comp.values()))} components")
 print("OK")

@@ -1,49 +1,57 @@
-"""Streaming ingestion + concurrent analytics on MVCC snapshots.
+"""Streaming ingestion + concurrent analytics on captured MVCC epochs.
 
-The writer ingests update waves; after each wave an analytics "reader" runs
-PageRank/WCC on a consistent retained version while new writes proceed —
-the paper's Fig. 7 / §4.5 workload in functional form.
+The writer ingests update waves through a ``GraphStore``; after each wave
+an O(1) ``capture()`` publishes the immutable state, and an analytics
+"reader" later runs PageRank/WCC on those consistent epochs while new
+writes proceed — the paper's Fig. 7 / §4.5 workload in functional form,
+backend-agnostic:
 
-  PYTHONPATH=src python examples/streaming_analytics.py
+  PYTHONPATH=src python examples/streaming_analytics.py            # local
+  PYTHONPATH=src python examples/streaming_analytics.py sharded
 """
+import sys
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro import analytics as A
-from repro.core.radixgraph import RadixGraph
+from repro.api import AnalyticsOp, OpBatch, ReadOp, make_store
 
-g = RadixGraph(n_max=8192, key_bits=32, expected_n=2000, batch=2048,
-               pool_blocks=32768, block_size=16, undirected=True)
+CONFIGS = {
+    "local": dict(n_max=8192, key_bits=32, expected_n=2000, batch=2048,
+                  pool_blocks=32768, block_size=16, undirected=True),
+    "sharded": dict(n_shards=1, n_per_shard=8192, expected_n=2000,
+                    batch=2048, pool_blocks=32768, block_size=16,
+                    undirected=True),
+}
+backend = sys.argv[1] if len(sys.argv) > 1 else "local"
+store = make_store(backend, **CONFIGS[backend])
 rng = np.random.default_rng(1)
 ids = rng.choice(2**32, 2000, replace=False).astype(np.uint64)
 
-versions = []
+epochs = []
 for wave in range(6):
     src, dst = rng.choice(ids, 4000), rng.choice(ids, 4000)
     w = rng.uniform(0.5, 2.0, 4000).astype(np.float32)
     w[rng.random(4000) < 0.2] = 0.0   # 20% deletions
     t0 = time.perf_counter()
-    g.apply_ops(src, dst, w)
-    ts = g.checkpoint_version()
+    store.apply(OpBatch.edges(src, dst, w))
+    epochs.append(store.capture())
     dt = time.perf_counter() - t0
     print(f"wave {wave}: ingested 8000 directed ops in {dt*1e3:.0f} ms "
-          f"-> version {ts}, {g.num_edges} live edges")
+          f"-> epoch {epochs[-1].seq}, "
+          f"{store.read(ReadOp('num_edges'))} live edges")
 
-# analytics over the retained versions (old states stay readable — MVCC):
-# snapshot_at resolves each timestamp against the retained version that
-# still holds its history, even after later compactions/defrags
-for label, vts in g.retained_versions[::2]:
-    snap = g.snapshot_at(vts)
-    pr = A.pagerank(snap, iters=10)
-    wcc = A.wcc(snap)
-    ncomp = len(set(np.asarray(wcc)[np.asarray(wcc) >= 0].tolist()))
-    print(f"version {label}: m={int(snap.m)}, pr_sum="
-          f"{float(jnp.sum(pr)):.3f}, components={ncomp}")
+# analytics over the captured epochs (old states stay readable — MVCC):
+# every epoch handle answers the same AnalyticsOps as the live state
+for h in epochs[::2]:
+    pr = store.analytics(AnalyticsOp("pagerank", {"iters": 10}), at=h)
+    comp = store.analytics(AnalyticsOp("wcc"), at=h)
+    print(f"epoch {h.seq}: m={store.read(ReadOp('num_edges'), at=h)}, "
+          f"pr_sum={sum(pr.values()):.3f}, "
+          f"components={len(set(comp.values()))}")
 
-# retained versions are device memory: release the ones we're done with
-for label, _ in g.retained_versions[:-1]:
-    g.release_version(label)
-print(f"retained after release: {g.retained_versions}")
+# epoch handles retain device memory: drop the ones we're done with
+keep = epochs[-1]
+epochs.clear()
+print(f"retained epoch: {keep.seq}")
 print("OK")

@@ -1,0 +1,32 @@
+"""``repro.api`` — the unified GraphStore front door.
+
+One typed surface over every storage backend (RapidStore-style decoupled
+query/update interface; one API so storage designs can be swapped and
+compared under identical workloads):
+
+    from repro.api import (GraphStore, OpBatch, ReadOp, AnalyticsOp,
+                           make_store)
+
+    store = make_store("local", n_max=4096, expected_n=1000)   # or "sharded"
+    store.apply(OpBatch.edges(src, dst, w))
+    deg = store.read(ReadOp("degree", ids=ids))
+    pr = store.analytics(AnalyticsOp("pagerank", {"iters": 20}))
+
+Backends answer the same ops in the same form, so benchmarks, examples,
+the dryrun harness and ``serve.GraphQueryService`` all drive through this
+module; the analytics registry (``repro.api.registry``) maps algorithm
+names to (shard-local phases, mesh combine loop) pairs.
+"""
+from .ir import AnalyticsOp, ApplyResult, OpBatch, ReadOp
+from .registry import (ANALYTICS, AnalyticsSpec, analytics_spec,
+                       available_analytics, register_analytics)
+from .store import (Epoch, GraphStore, LocalStore, ShardedStore,
+                    available_backends, make_store, register_backend)
+
+__all__ = [
+    "AnalyticsOp", "ApplyResult", "OpBatch", "ReadOp",
+    "ANALYTICS", "AnalyticsSpec", "analytics_spec", "available_analytics",
+    "register_analytics",
+    "Epoch", "GraphStore", "LocalStore", "ShardedStore",
+    "available_backends", "make_store", "register_backend",
+]

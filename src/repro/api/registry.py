@@ -1,0 +1,163 @@
+"""The distributed-analytics registry: algorithm name -> how every backend
+runs it.
+
+Each entry pairs the SHARD-LOCAL reference implementation (the single-CSR
+algorithms in ``analytics.algorithms`` — also the per-shard phases of the
+distributed loops) with the MESH COMBINE factory from ``dist.graph_engine``
+that stitches those phases over the shard axis. A backend never dispatches
+on algorithm names: ``LocalStore`` runs ``spec.single`` on its snapshot,
+``ShardedStore`` builds (and jit-caches) ``spec.make_dist`` — so adding an
+algorithm, or a whole new backend, is a registration, not a rewrite.
+
+Result kinds:
+
+* ``per_vertex`` — a value per live vertex; stores normalize to
+  ``{vertex_id: value}`` so answers are backend-independent;
+* ``per_query``  — an array aligned with the queried ID batch;
+* ``scalar``     — one number for the whole graph.
+
+``canonical_single`` post-processes the single-shard result into the
+backend-independent form (e.g. WCC's row-offset labels become the
+component's minimum vertex ID — exactly what the distributed loop
+propagates), so cross-backend parity is exact equality, not heuristics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro import analytics as A
+from repro.core.keys import unpack_keys
+from repro.dist import graph_engine as ge
+
+__all__ = ["AnalyticsSpec", "ANALYTICS", "register_analytics",
+           "analytics_spec", "available_analytics"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsSpec:
+    """How one named algorithm runs on every backend.
+
+    ``single(snap, *dyn, **static)`` answers on a single CSR snapshot;
+    ``make_dist(sspec, pspec, mesh, axis, m_cap, frontier_budget,
+    **static)`` builds the mesh program (``None`` = no distributed form
+    yet — the sharded backend raises with a pointer here).
+
+    ``dyn`` lists (param_name, kind) resolved per backend before the call:
+    ``'id'`` — one vertex ID -> int32 offset (single) / packed key (dist);
+    ``'ids'`` — an ID array -> offsets / packed keys.
+    ``absent`` is the per-vertex fill when a required ``'id'`` param names
+    a vertex the graph has never seen (dist loops yield it naturally; the
+    single path short-circuits to it).
+    """
+
+    name: str
+    single: Callable
+    make_dist: Optional[Callable]
+    dyn: Tuple[Tuple[str, str], ...] = ()
+    result: str = "per_vertex"
+    absent: Optional[float] = None
+    canonical_single: Optional[Callable] = None
+
+
+ANALYTICS: Dict[str, AnalyticsSpec] = {}
+
+
+def register_analytics(spec: AnalyticsSpec) -> AnalyticsSpec:
+    """Register (or override) an algorithm for every GraphStore backend."""
+    ANALYTICS[spec.name] = spec
+    return spec
+
+
+def analytics_spec(name: str) -> AnalyticsSpec:
+    if name not in ANALYTICS:
+        raise KeyError(f"unknown analytics op {name!r}; registered: "
+                       f"{sorted(ANALYTICS)} (register_analytics adds more)")
+    return ANALYTICS[name]
+
+
+def available_analytics(distributed: Optional[bool] = None):
+    """Registered names; ``distributed=True`` filters to mesh-capable."""
+    return sorted(n for n, s in ANALYTICS.items()
+                  if distributed is None
+                  or (s.make_dist is not None) == distributed)
+
+
+def _wcc_canonical(vals: np.ndarray, snap) -> np.ndarray:
+    """Row-offset component labels -> per-row minimum member vertex ID
+    (uint64) — the canonical labeling the distributed loop propagates."""
+    lab = np.asarray(vals)
+    active = np.asarray(snap.active)
+    vid = unpack_keys(np.asarray(snap.ids))
+    out = np.zeros(lab.shape, np.uint64)
+    live = active & (lab >= 0)
+    labs = lab[live]
+    if labs.size:
+        order = np.argsort(labs, kind="stable")
+        min_of = {}
+        for l, v in zip(labs[order].tolist(), vid[live][order].tolist()):
+            if l not in min_of or v < min_of[l]:
+                min_of[l] = v
+        out[live] = np.array([min_of[l] for l in labs.tolist()], np.uint64)
+    return out
+
+
+register_analytics(AnalyticsSpec(
+    name="bfs",
+    single=lambda snap, source, max_iters=32:
+        A.bfs(snap, source, max_iters=max_iters),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=32:
+        ge.make_bfs(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
+                    frontier_budget=budget),
+    dyn=(("source", "id"),), absent=-1))
+
+register_analytics(AnalyticsSpec(
+    name="pagerank",
+    single=lambda snap, iters=20, damping=0.85:
+        A.pagerank(snap, iters=iters, damping=damping),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, iters=20,
+    damping=0.85:
+        ge.make_pagerank(sspec, pspec, mesh, axis, m_cap, iters=iters,
+                         damping=damping, frontier_budget=budget)))
+
+register_analytics(AnalyticsSpec(
+    name="wcc",
+    single=lambda snap, max_iters=64: A.wcc(snap, max_iters=max_iters),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=64:
+        ge.make_wcc(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
+                    frontier_budget=budget),
+    canonical_single=_wcc_canonical))
+
+register_analytics(AnalyticsSpec(
+    name="sssp",
+    single=lambda snap, source, max_iters=64:
+        A.sssp(snap, source, max_iters=max_iters),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=64:
+        ge.make_sssp(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
+                     frontier_budget=budget),
+    dyn=(("source", "id"),), absent=float(A.INF)))
+
+register_analytics(AnalyticsSpec(
+    name="bc",
+    single=lambda snap, sources, max_depth=32:
+        A.bc(snap, sources, max_depth=max_depth),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_depth=32:
+        ge.make_bc(sspec, pspec, mesh, axis, m_cap, max_depth=max_depth,
+                   frontier_budget=budget),
+    dyn=(("sources", "ids"),)))
+
+register_analytics(AnalyticsSpec(
+    name="khop",
+    single=lambda snap, sources, k=2: A.khop(snap, sources, k=k),
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, k=2:
+        ge.make_khop_counts(sspec, pspec, mesh, axis, k=k, m_cap=m_cap,
+                            frontier_budget=budget),
+    dyn=(("sources", "ids"),), result="per_query"))
+
+register_analytics(AnalyticsSpec(
+    name="triangle_count",
+    single=lambda snap: A.triangle_count(snap),
+    make_dist=None,     # intersection needs remote adjacency; future entry
+    result="scalar"))

@@ -1,0 +1,612 @@
+"""``GraphStore`` — one typed front door over every storage backend.
+
+A store consumes the typed op IR (``OpBatch`` / ``ReadOp`` /
+``AnalyticsOp``) and hides how state is laid out: ``LocalStore`` wraps the
+eager single-shard ``RadixGraph``; ``ShardedStore`` wraps the
+``dist.graph_engine`` factories (mesh and budgets captured at
+construction, ``make_*`` closures built lazily and jit-cached per spec).
+Both answer reads and analytics in the SAME backend-independent form, so
+benchmarks, examples, the dryrun harness and the query service drive
+either through one code path — and a new backend (multi-host epoch
+handshake, another storage design, a CPU fallback) is a
+``register_backend`` call, not a rewrite.
+
+Epochs: ``capture()`` returns an O(1) immutable handle to the current
+functional state (the paper's MVCC versioned arrays); every read/analytics
+call accepts ``at=handle`` to answer against that version instead of the
+live state. Sealing an epoch in the serving layer is just ``capture()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edgepool as ep
+from repro.core import radixgraph as rg
+from repro.core import vertex_table as vt_mod
+from repro.core.keys import pack_keys, unpack_keys
+from repro.core.radixgraph import RadixGraph, interleave_undirected
+from repro.core.sort import SortSpec
+from repro.core.sort_optimizer import optimize_sort
+from repro.dist import graph_engine as ge
+
+from .ir import AnalyticsOp, ApplyResult, OpBatch, ReadOp
+from .registry import AnalyticsSpec, analytics_spec
+
+__all__ = ["GraphStore", "Epoch", "LocalStore", "ShardedStore",
+           "make_store", "register_backend", "available_backends"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Epoch:
+    """Immutable capture of a store's state. O(1): functional states are
+    pytree references, so holding an Epoch IS retaining the MVCC version —
+    drop the handle to free it. ``cache`` rides the handle (derived
+    artifacts like the CSR snapshot), so freeing the handle frees them
+    too — stores never pin a dropped epoch."""
+
+    state: Any
+    seq: int
+    cache: dict = dataclasses.field(default_factory=dict, compare=False,
+                                    repr=False)
+
+
+@runtime_checkable
+class GraphStore(Protocol):
+    """The protocol every backend implements (structural — no base class
+    to inherit; ``register_backend`` is the only ceremony)."""
+
+    backend: str
+    n_shards: int
+
+    def apply(self, batch: OpBatch) -> ApplyResult: ...
+    def read(self, op: ReadOp, at: Optional[Epoch] = None) -> Any: ...
+    def analytics(self, op: AnalyticsOp,
+                  at: Optional[Epoch] = None) -> Any: ...
+    def capture(self) -> Epoch: ...
+    def clock(self, at: Optional[Epoch] = None) -> int: ...
+
+
+# jitted single-shard read programs shared by every LocalStore (static
+# specs hash per-config, so distinct stores share compile caches the same
+# way RadixGraph's module-level wrappers do)
+_lookup = jax.jit(rg.step_lookup, static_argnums=(0, 1))
+_degree = jax.jit(rg.step_degree_counts, static_argnums=(0, 1))
+_neighbors = jax.jit(rg.step_neighbors, static_argnums=(0, 1, 4))
+_snapshot = jax.jit(rg.step_snapshot, static_argnums=(0, 1, 2))
+
+
+def _values_item(d: dict) -> dict:
+    return {int(k): (v.item() if hasattr(v, "item") else v)
+            for k, v in d.items()}
+
+
+class LocalStore:
+    """Single-shard backend: the eager ``RadixGraph`` behind the IR.
+
+    Constructor kwargs are ``RadixGraph``'s (plus ``m_cap`` — the CSR pad
+    of snapshots/analytics; analytics cost scales with it, so benchmarks
+    pass a tight bound). The wrapped graph stays reachable as ``.graph``
+    for backend-specific extras (MVCC version labels, defrag, memory
+    accounting)."""
+
+    backend = "local"
+
+    def __init__(self, m_cap: Optional[int] = None, **graph_kwargs):
+        self.graph = RadixGraph(**graph_kwargs)
+        self.n_shards = 1
+        self.m_cap = m_cap or self.graph.pool_spec.capacity_entries
+        self._seq = 0
+        self.stats = dict(ops_applied=0, ops_dropped=0)
+
+    # ---- mutation ----
+    def apply(self, batch: OpBatch) -> ApplyResult:
+        if len(batch) == 0:
+            return ApplyResult(0, 0)
+        self._seq += 1
+        g = self.graph
+        if batch.kind == "edges":
+            d0 = g.dropped_ops
+            g.apply_ops(batch.src, batch.dst, batch.weight)
+            res = ApplyResult(len(batch), g.dropped_ops - d0)
+        else:
+            o0 = int(g.state.vt.overflow)
+            if batch.kind == "add_vertices":
+                g.add_vertices(batch.ids)
+            else:
+                g.delete_vertices(batch.ids)
+            res = ApplyResult(len(batch), int(g.state.vt.overflow) - o0)
+        self.stats["ops_applied"] += res.applied
+        self.stats["ops_dropped"] += res.dropped
+        return res
+
+    # ---- epochs ----
+    def capture(self) -> Epoch:
+        return Epoch(self.graph.state, self._seq)
+
+    def clock(self, at: Optional[Epoch] = None) -> int:
+        state = at.state if at is not None else self.graph.state
+        return int(state.pool.clock) - 1
+
+    def _state(self, at: Optional[Epoch]):
+        return at.state if at is not None else self.graph.state
+
+    # ---- reads ----
+    def _per_key(self, state, ids, fn):
+        out = []
+        for keys, _ in self.graph._key_batches(ids):
+            out.append(np.asarray(fn(state, keys)))
+        n = len(np.asarray(ids))
+        return (np.concatenate(out)[:n] if out
+                else np.zeros((0,), np.int32))
+
+    def _snap(self, at: Optional[Epoch]):
+        if at is None:
+            return self.graph.snapshot(m_cap=self.m_cap)    # epoch-cached
+        # epoch-pinned reads share one snapshot per handle; it rides the
+        # handle's cache, so dropping the Epoch frees it with the state
+        snap = at.cache.get("snap")
+        if snap is None:
+            snap = at.cache["snap"] = _snapshot(
+                self.graph.sort_spec, self.graph.pool_spec, self.m_cap,
+                at.state)
+        return snap
+
+    def read(self, op: ReadOp, at: Optional[Epoch] = None):
+        g = self.graph
+        state = self._state(at)
+        if op.kind == "lookup":
+            off = self._per_key(state, op.ids, lambda s, k: _lookup(
+                g.sort_spec, g.pool_spec, s, k))
+            return off >= 0
+        if op.kind == "degree":
+            return self._per_key(state, op.ids, lambda s, k: _degree(
+                g.sort_spec, g.pool_spec, s, k))
+        if op.kind == "neighbors":
+            width = op.width or g.pool_spec.dmax
+            ds, ws, cs = [], [], []
+            for keys, _ in g._key_batches(op.ids):
+                bd, bw, _, bcnt = _neighbors(g.sort_spec, g.pool_spec,
+                                             state, keys, width, None)
+                ds.append(np.asarray(bd))
+                ws.append(np.asarray(bw))
+                cs.append(np.asarray(bcnt))
+            n = len(np.asarray(op.ids))
+            d = np.concatenate(ds)[:n]
+            w = np.concatenate(ws)[:n]
+            cnt = np.concatenate(cs)[:n]
+            ids_np = np.asarray(state.vt.ids)
+            oc = np.clip(d, 0, ids_np.shape[0] - 1)
+            gids = unpack_keys(ids_np[oc])
+            return [(gids[i, :cnt[i]], w[i, :cnt[i]]) for i in range(n)]
+        if op.kind == "num_vertices":
+            if at is None:
+                return self.graph.num_vertices
+            return int(vt_mod.num_active(at.state.vt))
+        if op.kind == "num_edges":
+            if at is None:
+                return self.graph.num_edges     # O(1) live counter
+            return int(self._snap(at).m)
+        if op.kind == "snapshot":
+            return self._snap(at)
+        raise ValueError(op.kind)
+
+    # ---- analytics ----
+    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
+        spec = analytics_spec(op.name)
+        state = self._state(at)
+        snap = self._snap(at)
+        params = dict(op.params)
+        g = self.graph
+        look = lambda s, k: _lookup(g.sort_spec, g.pool_spec, s, k)
+        dyn, absent_source = [], False
+        for pname, kind in spec.dyn:
+            v = params.pop(pname)
+            if kind == "id":
+                off = self._per_key(state, np.asarray([v], np.uint64),
+                                    look)[0]
+                if off < 0:
+                    absent_source = True
+                dyn.append(jnp.int32(max(int(off), 0)))
+            else:
+                ids = np.asarray(v, np.uint64)
+                off = self._per_key(state, ids, look)
+                if spec.result == "per_query":
+                    dyn.append((jnp.asarray(np.clip(off, 0, None),
+                                            jnp.int32), off))
+                else:
+                    # per-vertex source sets (BC): absent sources
+                    # contribute nothing — drop them, like the mesh loop
+                    dyn.append(jnp.asarray(off[off >= 0], jnp.int32))
+        n_cap = snap.indptr.shape[0] - 1
+        if absent_source:
+            vals = np.full((n_cap,), spec.absent)
+        else:
+            args = [a[0] if isinstance(a, tuple) else a for a in dyn]
+            vals = spec.single(snap, *args, **params)
+        if spec.result == "scalar":
+            return np.asarray(vals).item()
+        if spec.result == "per_query":
+            out = np.asarray(vals).copy()
+            for a in dyn:
+                if isinstance(a, tuple):
+                    out[np.asarray(a[1]) < 0] = 0   # absent queries -> 0
+            return out
+        if spec.canonical_single is not None:
+            vals = spec.canonical_single(vals, snap)
+        vals = np.asarray(vals)
+        active = np.asarray(snap.active)
+        vids = unpack_keys(np.asarray(snap.ids))
+        # .tolist() yields Python scalars in one C pass — no per-vertex
+        # .item() loop on the read path
+        return dict(zip(vids[active].tolist(), vals[active].tolist()))
+
+
+class ShardedStore:
+    """Mesh backend: vertex-space sharding over ``dist.graph_engine``.
+
+    Mesh, specs and exchange budgets are captured at construction; every
+    ``make_*`` closure is built LAZILY on first use and cached per static
+    spec (`_fn`), so a store only compiles the programs its workload
+    actually exercises. The write path keeps the live state vertex-SYNCED
+    (incremental registration exchange, skipped entirely for batches that
+    create no vertices) so any captured epoch is analytics-ready."""
+
+    backend = "sharded"
+
+    def __init__(self, n_shards: int = 1, *, n_per_shard: int = 8192,
+                 expected_n: int = 4096, key_bits: int = 32,
+                 pool_blocks: int = 16384, block_size: int = 16,
+                 k_max: int = 128, dmax: int = 2048,
+                 batch: int = 1024, query_batch: int = 256,
+                 m_cap: Optional[int] = None, axis: str = "data",
+                 undirected: bool = False, pack: bool = True,
+                 capacity_factor: float = 1.0,
+                 route_budget: Optional[int] = None,
+                 frontier_budget: Optional[int] = None,
+                 sync_incremental: bool = True,
+                 sync_budget: Optional[int] = None,
+                 sort_capacity_factor: Optional[float] = None,
+                 devices=None):
+        from jax.sharding import AxisType
+        assert batch % n_shards == 0 and query_batch % n_shards == 0, \
+            "batch sizes must be divisible by the shard count"
+        self.n_shards = n_shards
+        self.n_per_shard = n_per_shard
+        self.key_bits = key_bits
+        self.batch = batch
+        self.query_batch = query_batch
+        self.axis = axis
+        self.undirected = undirected
+        self.pack = pack
+        self.capacity_factor = capacity_factor
+        self.route_budget = route_budget
+        self.frontier_budget = frontier_budget
+        self.sync_incremental = sync_incremental
+        self.mesh = jax.make_mesh(
+            (n_shards,), (axis,),
+            devices=(devices if devices is not None
+                     else jax.devices()[:n_shards]),
+            axis_types=(AxisType.Auto,))
+        cfg = optimize_sort(expected_n, key_bits, 5)
+        self.sspec = SortSpec.from_config(cfg, n_per_shard,
+                                          sort_capacity_factor)
+        self.pspec = ep.PoolSpec(n_blocks=pool_blocks,
+                                 block_size=block_size,
+                                 k_max=k_max, dmax=dmax)
+        self.m_cap = m_cap or self.pspec.capacity_entries
+        if sync_budget is None:
+            # one write step creates at most 2 * batch rows globally
+            sync_budget = min(n_per_shard, 2 * batch // n_shards + 64)
+        self.sync_budget = sync_budget
+        self._live_state = None  # materialized on first use (compile-only
+        #                          consumers like dryrun never allocate it)
+        self._fns: Dict[Any, Callable] = {}
+        self._synced_rows = np.zeros((n_shards,), np.int32)
+        self._seq = 0
+        self._snap_cache = None        # (state-ref, per-shard snapshots)
+        self._host_cache = None        # (state-ref, host id/row view)
+        self._full_sync_cache = None   # (state-ref, synced-state) pair
+        self.stats = dict(ops_applied=0, ops_dropped=0,
+                          sync_runs=0, sync_skips=0)
+
+    @property
+    def state(self):
+        """The live sharded state pytree, allocated lazily: AOT-lowering
+        consumers (``state_struct``/``*_program``) never pay for it."""
+        if self._live_state is None:
+            self._live_state = ge.make_sharded_state(
+                self.sspec, self.pspec, self.n_shards, self.n_per_shard)
+        return self._live_state
+
+    @state.setter
+    def state(self, value):
+        self._live_state = value
+
+    # ---- lazily-built, spec-cached jitted programs ----
+    def _fn(self, key, build) -> Callable:
+        f = self._fns.get(key)
+        if f is None:
+            f = self._fns[key] = jax.jit(build())
+        return f
+
+    def apply_program(self, donate: bool = False) -> Callable:
+        def build():
+            return ge.make_apply_edges(
+                self.sspec, self.pspec, self.mesh, self.axis,
+                pack=self.pack, capacity_factor=self.capacity_factor,
+                route_budget=self.route_budget)
+        if donate:      # AOT-lowering variant (dryrun memory analysis)
+            key = ("apply", "donate")
+            if key not in self._fns:
+                self._fns[key] = jax.jit(build(), donate_argnums=(0,))
+            return self._fns[key]
+        return self._fn(("apply",), build)
+
+    def analytics_program(self, name: str, **static) -> Callable:
+        """The jitted mesh program of a registered algorithm (also the
+        AOT-compile entry the dryrun harness lowers)."""
+        spec = analytics_spec(name)
+        if spec.make_dist is None:
+            raise NotImplementedError(
+                f"analytics op {name!r} has no mesh combine loop "
+                f"registered (repro.api.registry) — run it on a "
+                f"LocalStore, or register a distributed form")
+        key = ("alg", name, tuple(sorted(static.items())))
+        return self._fn(key, lambda: spec.make_dist(
+            self.sspec, self.pspec, self.mesh, self.axis, self.m_cap,
+            self.frontier_budget, **static))
+
+    def state_struct(self):
+        """Shape/dtype pytree of a fresh sharded state (AOT lowering)."""
+        return jax.eval_shape(lambda: ge.make_sharded_state(
+            self.sspec, self.pspec, self.n_shards, self.n_per_shard))
+
+    # ---- mutation ----
+    def _keys(self, ids) -> np.ndarray:
+        return np.asarray(pack_keys(np.asarray(ids, np.uint64),
+                                    self.key_bits))
+
+    def apply(self, batch: OpBatch) -> ApplyResult:
+        if batch.kind != "edges":
+            raise NotImplementedError(
+                "sharded vertex-only mutation batches are not routed yet: "
+                "vertices materialize from edge endpoints (plus the owner "
+                "registration sync); use LocalStore for vertex CRUD")
+        if len(batch) == 0:
+            return ApplyResult(0, 0)
+        src, dst, w = batch.src, batch.dst, batch.weight
+        if self.undirected:
+            src, dst, w = interleave_undirected(src, dst, w)
+        sk, dk = self._keys(src), self._keys(dst)
+        B = self.batch
+        fn = self.apply_program()
+        dropped = 0
+        for lo in range(0, len(src), B):
+            n = min(B, len(src) - lo)
+            psk = np.zeros((B, 2), np.uint32)
+            pdk = np.zeros((B, 2), np.uint32)
+            pw = np.zeros((B,), np.float32)
+            mask = np.zeros((B,), bool)
+            psk[:n], pdk[:n], pw[:n] = sk[lo:lo + n], dk[lo:lo + n], \
+                w[lo:lo + n]
+            mask[:n] = True
+            self.state, d = fn(self.state, jnp.asarray(psk),
+                               jnp.asarray(pdk), jnp.asarray(pw),
+                               jnp.asarray(mask))
+            dropped += int(np.asarray(d).sum())
+        self._seq += 1
+        self._snap_cache = self._host_cache = None
+        # raw submitted ops (undirected doubling is an internal detail),
+        # so accounting matches ApplyResult and the local backend
+        self.stats["ops_applied"] += len(batch)
+        self.stats["ops_dropped"] += dropped
+        if self.sync_incremental:
+            self._maybe_sync_live()
+        return ApplyResult(len(batch), dropped)
+
+    def _maybe_sync_live(self):
+        """Eager incremental vertex sync after a write batch: only rows
+        created since the last sync are registered at their owner shards
+        (compacted exchange w/ dense fallback); a batch creating no
+        vertices skips the collective entirely."""
+        rows = np.asarray(self.state.vt.num_rows)
+        if np.array_equal(rows, self._synced_rows):
+            self.stats["sync_skips"] += 1
+            return
+        fn = self._fn(("sync_inc",), lambda: ge.make_sync_vertices(
+            self.sspec, self.pspec, self.mesh, self.axis,
+            budget=self.sync_budget, incremental=True))
+        self.state = fn(self.state, jnp.asarray(self._synced_rows))
+        self._synced_rows = np.asarray(self.state.vt.num_rows)
+        self.stats["sync_runs"] += 1
+
+    # ---- epochs ----
+    def capture(self) -> Epoch:
+        return Epoch(self.state, self._seq)
+
+    def clock(self, at: Optional[Epoch] = None) -> int:
+        state = at.state if at is not None else self.state
+        return int(np.asarray(state.pool.clock)[0]) - 1
+
+    def _state(self, at: Optional[Epoch]):
+        return at.state if at is not None else self.state
+
+    def _synced(self, state):
+        """A vertex-synced view of ``state`` (identity when the write path
+        keeps the live state registered as it goes)."""
+        if self.sync_incremental:
+            return state
+        if self._full_sync_cache is not None and \
+                self._full_sync_cache[0] is state:
+            return self._full_sync_cache[1]
+        fn = self._fn(("sync",), lambda: ge.make_sync_vertices(
+            self.sspec, self.pspec, self.mesh, self.axis))
+        synced = fn(state)
+        self.stats["sync_runs"] += 1
+        self._full_sync_cache = (state, synced)
+        return synced
+
+    # ---- reads ----
+    def _snapshots(self, state):
+        if self._snap_cache is not None and self._snap_cache[0] is state:
+            return self._snap_cache[1]
+        fn = self._fn(("snapshot",), lambda: ge.make_snapshot(
+            self.sspec, self.pspec, self.mesh, self.axis, self.m_cap))
+        snaps = fn(state)
+        self._snap_cache = (state, snaps)
+        return snaps
+
+    def _host_view(self, state):
+        """Host-side id/row maps of a (synced) state for lookup/neighbors:
+        one device pull per state identity, then O(1) per query."""
+        if self._host_cache is not None and self._host_cache[0] is state:
+            return self._host_cache[1]
+        ids = np.asarray(state.vt.ids)
+        live = np.asarray(state.vt.del_time) == 0
+        vid = unpack_keys(ids)
+        owner = np.asarray(ge.shard_of_keys(
+            jnp.asarray(ids.reshape(-1, 2)), self.n_shards)).reshape(
+                ids.shape[:2])
+        row_of = []
+        present = set()
+        for s in range(self.n_shards):
+            rows = np.nonzero(live[s])[0]
+            row_of.append(dict(zip(vid[s][rows].tolist(), rows.tolist())))
+            present.update(row_of[-1])
+        view = dict(vid=vid, live=live, owner=owner, row_of=row_of,
+                    present=present)
+        self._host_cache = (state, view)
+        return view
+
+    def read(self, op: ReadOp, at: Optional[Epoch] = None):
+        state = self._state(at)
+        if op.kind == "degree":
+            fn = self._fn(("degree",), lambda: ge.make_khop_counts(
+                self.sspec, self.pspec, self.mesh, self.axis))
+            Q = self.query_batch
+            keys = self._keys(op.ids)
+            out = np.zeros((len(op.ids),), np.int32)
+            for lo in range(0, len(op.ids), Q):
+                chunk = keys[lo:lo + Q]
+                buf = np.zeros((Q, 2), np.uint32)
+                buf[:len(chunk)] = chunk
+                cnt = np.asarray(fn(state, jnp.asarray(buf)))
+                out[lo:lo + len(chunk)] = cnt[:len(chunk)]
+            return out
+        if op.kind == "lookup":
+            present = self._host_view(self._synced(state))["present"]
+            return np.array([int(x) in present for x in op.ids], bool)
+        if op.kind == "neighbors":
+            # edges live in the SOURCE's hash-owner shard: read that
+            # shard's CSR row (host-materialized per-shard snapshots)
+            view = self._host_view(state)
+            snaps = self._snapshots(state)
+            indptr = np.asarray(snaps.indptr)
+            dst = np.asarray(snaps.dst)
+            wgt = np.asarray(snaps.weight)
+            out = []
+            for x in np.asarray(op.ids, np.uint64):
+                key = self._keys(np.asarray([x], np.uint64))
+                s = int(np.asarray(ge.shard_of_keys(
+                    jnp.asarray(key), self.n_shards))[0])
+                row = view["row_of"][s].get(int(x))
+                if row is None:
+                    out.append((np.zeros((0,), np.uint64),
+                                np.zeros((0,), np.float32)))
+                    continue
+                lo, hi = int(indptr[s][row]), int(indptr[s][row + 1])
+                offs = dst[s][lo:hi]
+                out.append((view["vid"][s][offs], wgt[s][lo:hi]))
+            return out
+        if op.kind == "num_vertices":
+            view = self._host_view(self._synced(state))
+            mine = view["live"] & (view["owner"] ==
+                                   np.arange(self.n_shards)[:, None])
+            return int(np.sum(mine))
+        if op.kind == "num_edges":
+            return int(np.asarray(self._snapshots(state).m).sum())
+        if op.kind == "snapshot":
+            return self._snapshots(state)
+        raise ValueError(op.kind)
+
+    # ---- analytics ----
+    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
+        spec = analytics_spec(op.name)
+        if op.name == "wcc" and self.key_bits > 32:
+            raise NotImplementedError(
+                "distributed WCC labels are single uint32 words (min "
+                "vertex ID): key_bits > 32 needs a two-word label loop")
+        params = dict(op.params)
+        dyn, query_ids = [], None
+        for pname, kind in spec.dyn:
+            v = params.pop(pname)
+            if kind == "id":
+                dyn.append(jnp.asarray(
+                    self._keys(np.asarray([v], np.uint64))[0]))
+            elif spec.result == "per_query":
+                query_ids = np.asarray(v, np.uint64)
+            else:
+                # replicated source sets (BC): pad to the next power of
+                # two with absent-key sentinels (hash to nothing, roff<0,
+                # contribute zero) so distinct set sizes reuse a bounded
+                # family of compiled programs
+                ids = np.asarray(v, np.uint64)
+                S = max(len(ids), 1)
+                Sp = 1 << (S - 1).bit_length()
+                buf = np.full((Sp, 2), 0xFFFFFFFF, np.uint32)
+                buf[:len(ids)] = self._keys(ids)
+                dyn.append(jnp.asarray(buf))
+        fn = self.analytics_program(op.name, **params)
+        state = self._synced(self._state(at))
+        if query_ids is not None:
+            # query batches ride the shard partition in fixed
+            # ``query_batch`` chunks (ONE compiled shape, like the degree
+            # read path); sentinel-padded tails answer 0 and are sliced
+            Q = self.query_batch
+            q = len(query_ids)
+            keys = self._keys(query_ids)
+            out = np.zeros((q,), np.int32)
+            for lo in range(0, q, Q):
+                n_c = min(Q, q - lo)
+                buf = np.full((Q, 2), 0xFFFFFFFF, np.uint32)
+                buf[:n_c] = keys[lo:lo + n_c]
+                vals = np.asarray(fn(state, jnp.asarray(buf), *dyn))
+                out[lo:lo + n_c] = vals[:n_c]
+            return out
+        vals = fn(state, *dyn)
+        return _values_item(
+            ge.collect_owner_values(state, np.asarray(vals),
+                                    self.n_shards))
+
+
+# ---- backend registry ----
+
+_BACKENDS: Dict[str, Callable[..., GraphStore]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., GraphStore]):
+    """Register a GraphStore backend under ``name`` (see ``make_store``)."""
+    _BACKENDS[name] = factory
+    return factory
+
+
+def available_backends():
+    return sorted(_BACKENDS)
+
+
+def make_store(backend: str, **kwargs) -> GraphStore:
+    """Construct a registered backend: ``make_store('local', n_max=...)``
+    or ``make_store('sharded', n_shards=...)``."""
+    if backend not in _BACKENDS:
+        raise KeyError(f"unknown GraphStore backend {backend!r}; "
+                       f"registered: {available_backends()}")
+    return _BACKENDS[backend](**kwargs)
+
+
+register_backend("local", LocalStore)
+register_backend("sharded", ShardedStore)

@@ -82,6 +82,8 @@ class EdgePool(NamedTuple):
     overflow: jnp.ndarray  # int32 scalar — pool-exhaustion events
     live_m: jnp.ndarray    # int32 scalar — live (deduped, tombstone-free) edges
     live_dirty: jnp.ndarray  # int32 scalar — 1 when live_m needs a recount
+    defrags: jnp.ndarray   # int32 scalar — global rebuilds so far (hub-heavy
+    #                        streams exceeding k_big per batch show up here)
 
 
 def make_edge_pool(spec: PoolSpec) -> EdgePool:
@@ -93,7 +95,7 @@ def make_edge_pool(spec: PoolSpec) -> EdgePool:
         ts=jnp.zeros((nb, bs), jnp.int32),
         owner=jnp.full((nb,), -1, jnp.int32),
         next_block=z, garbage=z, clock=jnp.ones((), jnp.int32), overflow=z,
-        live_m=z, live_dirty=z,
+        live_m=z, live_dirty=z, defrags=z,
     )
 
 
@@ -514,7 +516,8 @@ def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
                          next_block=total_blocks,
                          garbage=jnp.zeros((), jnp.int32),
                          live_m=live_cnt,
-                         live_dirty=jnp.zeros((), jnp.int32))
+                         live_dirty=jnp.zeros((), jnp.int32),
+                         defrags=pool.defrags + 1)
     return pool, vt
 
 

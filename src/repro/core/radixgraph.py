@@ -25,7 +25,21 @@ from .vertex_table import VertexTable
 
 __all__ = ["RadixGraph", "GraphState", "GraphSnapshot", "step_add_vertices",
            "step_delete_vertices", "step_update_edges", "step_lookup",
-           "step_degree_counts", "step_neighbors", "step_snapshot"]
+           "step_degree_counts", "step_neighbors", "step_snapshot",
+           "interleave_undirected"]
+
+
+def interleave_undirected(src, dst, w):
+    """Undirected edge-op doubling, shared by every storage backend:
+    interleave the two directions so the mixed-op stream order is preserved
+    (op i's orientations land at timestamps 2i, 2i+1)."""
+    s2 = np.empty(2 * len(src), np.uint64)
+    d2 = np.empty_like(s2)
+    w2 = np.empty(2 * len(src), np.float32)
+    s2[0::2], s2[1::2] = src, dst
+    d2[0::2], d2[1::2] = dst, src
+    w2[0::2], w2[1::2] = w, w
+    return s2, d2, w2
 
 
 class GraphState(NamedTuple):
@@ -286,15 +300,7 @@ class RadixGraph:
         dst = np.asarray(dst, np.uint64)
         w = np.asarray(w, np.float32)
         if self.undirected:
-            # interleave directions so the mixed-op stream order is preserved
-            # (op i's two directions land at timestamps 2i, 2i+1)
-            s2 = np.empty(2 * len(src), np.uint64)
-            d2 = np.empty_like(s2)
-            w2 = np.empty(2 * len(src), np.float32)
-            s2[0::2], s2[1::2] = src, dst
-            d2[0::2], d2[1::2] = dst, src
-            w2[0::2], w2[1::2] = w, w
-            src, dst, w = s2, d2, w2
+            src, dst, w = interleave_undirected(src, dst, w)
         ps, mask = self._pad(src, 0, np.uint64)
         pd, _ = self._pad(dst, 0, np.uint64)
         pw, _ = self._pad(w, 0, np.float32)
@@ -449,6 +455,14 @@ class RadixGraph:
             self._snap_cache[(None, m_cap)] = (self.state, snap)
             return m
         return int(pool.live_m)
+
+    @property
+    def num_defrags(self) -> int:
+        """Global pool rebuilds so far — the fast path's fallback counter
+        (hub-heavy streams overflowing more than ``k_big`` over-window
+        vertices per batch land here; Theorem 2 keeps it O(log) in the op
+        count otherwise)."""
+        return int(self.state.pool.defrags)
 
     def memory_bytes(self, materialized=True) -> int:
         """Paper-comparable memory: materialized SORT slots (4B), vertex rows

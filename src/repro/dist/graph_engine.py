@@ -46,6 +46,7 @@ from repro.core.sort import SortSpec
 
 __all__ = ["make_sharded_state", "make_apply_edges", "make_khop_counts",
            "make_sync_vertices", "make_snapshot", "make_bfs", "make_pagerank",
+           "make_wcc", "make_sssp", "make_bc",
            "collect_owner_values", "shard_of_keys"]
 
 
@@ -268,8 +269,12 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     k-hop neighbourhood counts for arbitrary query keys. Queries are routed
     with the same hash partition as updates.
 
-    k == 1 answers out-degree straight off the owner's edge array (0 for
-    absent vertices, self-loops count) with a route + return all_to_all.
+    k == 1 with ``m_cap=None`` answers out-degree straight off the owner's
+    edge array (0 for absent vertices, self-loops count) with a route +
+    return all_to_all — the degree-query fast path. With ``m_cap`` set,
+    k == 1 runs the frontier body below instead, matching
+    ``analytics.khop`` exactly (distinct neighbors, source/self-loop
+    excluded).
 
     k in (2, 3) runs BOUNDED frontier rounds over per-shard CSR snapshots
     (requires ``m_cap`` and a vertex-SYNCED state): every round each shard
@@ -368,7 +373,7 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         counts = jnp.maximum(counts - 1, 0)  # drop the source; absent -> 0
         return counts[my * Ql + idx]         # psum-replicated: no return hop
 
-    body = body_degree if k == 1 else body_khop
+    body = body_degree if (k == 1 and m_cap is None) else body_khop
     sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
                         out_specs=P(axis), check_rep=False)
 
@@ -549,6 +554,80 @@ def make_bfs(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     return sharded
 
 
+def _owner_value_route(sspec, g: GraphState, n: int, axis: str, a2a, owner,
+                       rowlive, budget: Optional[int], impl):
+    """Run ``impl(rtgt, fwd, bwd)`` under the live-row -> owner-row exchange
+    shared by every iterative combine loop (PageRank inflow, WCC labels,
+    SSSP distances, BC sigma/delta).
+
+    The route is data-independent — every live local row ships to its
+    hash-owner's shard — so it is resolved ONCE per program: a key exchange
+    binds each receiver slot to one of the receiver's own rows (``rtgt``),
+    and per iteration only VALUES move:
+
+      ``fwd(vals)``   (n_cap, C) per-local-row values -> (R, C) routed rows
+                      at the receiver, aligned with ``rtgt`` (combine with a
+                      ``.at[rtgt].add/min`` scatter; slot n_cap is the dump);
+      ``bwd(merged)`` (n_cap + 1, C) owner-merged values -> ((n_cap, C), ok):
+                      every routed row reads its owner's merged value back
+                      over the inverse all_to_all (``ok`` marks routed rows).
+
+    With ``budget`` set the exchange ships count-prefixed compacted buckets
+    (``_route_compact``) whenever no bucket spills — decided by ONE
+    replicated psum up front, since the route never changes mid-run — and
+    falls back to the dense lossless layout otherwise, so results are
+    identical either way."""
+    n_cap = g.vt.del_time.shape[0]
+    keys2 = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
+
+    def build(compact: bool):
+        if compact:
+            F = budget
+            stride = F + 1
+            rows, valid = _route_compact(owner, rowlive, keys2, n, F, a2a)
+            slot, ok = _bucket_slots(owner, rowlive, F)
+            tgt = jnp.where(ok, slot + slot // F + 1, n * stride)
+        else:
+            F = n_cap
+            stride = n_cap
+            rows, valid = _route_dense(owner, rowlive, keys2, n, n_cap, a2a)
+            slot, ok = _bucket_slots(owner, rowlive, n_cap)
+            tgt = jnp.where(ok, slot, n * stride)
+        R = n * F
+        roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
+        rtgt = jnp.where(valid & (roff >= 0), roff, n_cap)
+        tgtc = jnp.clip(tgt, 0, n * stride - 1)
+
+        def fwd(vals):
+            C = vals.shape[1]
+            vbuf = jnp.zeros((n * stride, C), vals.dtype).at[tgt].set(
+                vals, mode="drop")
+            r = a2a(vbuf.reshape(n, stride, C))
+            if compact:
+                r = r[:, 1:, :]
+            return r.reshape(R, C)
+
+        def bwd(merged):
+            ans = merged[rtgt]                                    # (R, C)
+            C = ans.shape[1]
+            if compact:
+                abuf = jnp.zeros((n, stride, C), ans.dtype).at[
+                    :, 1:, :].set(ans.reshape(n, F, C))
+                back = a2a(abuf).reshape(n * stride, C)
+            else:
+                back = a2a(ans.reshape(n, stride, C)).reshape(n * stride, C)
+            return back[tgtc], ok
+
+        return rtgt, fwd, bwd
+
+    if budget is None:
+        return impl(*build(False))
+    ovf = _route_overflow(owner, rowlive, n, budget, axis)
+    return jax.lax.cond(ovf,
+                        lambda _: impl(*build(False)),
+                        lambda _: impl(*build(True)), None)
+
+
 def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                   m_cap: int, iters: int = 20, damping: float = 0.85,
                   frontier_budget: Optional[int] = None):
@@ -569,7 +648,6 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     def body(state):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
-        NC = n * n_cap
         snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
         edges = alg.csr_edges(snap)   # loop-invariant: built once, not per iter
         my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
@@ -580,14 +658,12 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         n_act = jnp.maximum(jax.lax.psum(
             jnp.sum(mine.astype(jnp.float32)), axis), 1.0)
         pr0 = jnp.where(mine, 1.0 / n_act, 0.0)
-        keys2 = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
 
-        def iterate(rtgt, value_route):
-            """Key slots exchanged once; per iteration only values move."""
+        def impl(rtgt, fwd, bwd):
             def step(pr, _):
                 contrib = alg.pagerank_contrib(snap, pr)
                 local_in = alg.pagerank_scatter(snap, contrib, edges)
-                rv = value_route(local_in)
+                rv = fwd(local_in[:, None])[:, 0]
                 inflow = jnp.zeros((n_cap + 1,)).at[rtgt].add(rv)[:n_cap]
                 dangling = jax.lax.psum(
                     jnp.sum(jnp.where(mine & (deg == 0), pr, 0.0)), axis)
@@ -598,44 +674,233 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
             pr, _ = jax.lax.scan(step, pr0, None, length=iters)
             return pr
 
-        def dense_impl(_):
-            rows, valid = _route_dense(owner, rowlive, keys2, n, n_cap, a2a)
-            roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
-            rtgt = jnp.where(valid & (roff >= 0), roff, n_cap)
-            slot, ok = _bucket_slots(owner, rowlive, n_cap)
-
-            def route_vals(local_in):
-                vbuf = _scatter_rows(local_in, jnp.where(ok, slot, NC), NC,
-                                     0.0)
-                return a2a(vbuf.reshape(n, n_cap)).reshape(NC)
-
-            return iterate(rtgt, route_vals)
-
-        if frontier_budget is None:
-            return dense_impl(None)[None]
-
-        F = frontier_budget
-        stride = F + 1
-
-        def compact_impl(_):
-            rows, valid = _route_compact(owner, rowlive, keys2, n, F, a2a)
-            roff = sort_mod.lookup(sspec, g.sort, rows[:, 0:2])
-            rtgt = jnp.where(valid & (roff >= 0), roff, n_cap)
-            slot, ok = _bucket_slots(owner, rowlive, F)
-            tgt = jnp.where(ok, slot + slot // F + 1, n * stride)
-
-            def route_vals(local_in):
-                vbuf = jnp.zeros((n * stride,)).at[tgt].set(local_in,
-                                                            mode="drop")
-                return a2a(vbuf.reshape(n, stride))[:, 1:].reshape(n * F)
-
-            return iterate(rtgt, route_vals)
-
-        ovf = _route_overflow(owner, rowlive, n, F, axis)
-        pr = jax.lax.cond(ovf, dense_impl, compact_impl, None)
+        pr = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                frontier_budget, impl)
         return pr[None]
 
     sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_wcc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+             m_cap: int, max_iters: int = 64,
+             frontier_budget: Optional[int] = None):
+    """Build ``wcc(state) -> uint32[n_shards, n_cap]`` — distributed weakly
+    connected components by min-label propagation. Labels are CANONICAL
+    across shard counts: each component converges to the minimum live vertex
+    ID in it (the single-shard ``analytics.wcc`` reference uses row offsets;
+    compare after mapping its labels to per-component min IDs). Requires a
+    <= 32-bit ID universe (keys' hi word zero) so a label is one uint32 —
+    every graph path in this repo packs 32-bit IDs. Assumes symmetric
+    (undirected) edge insertion like the reference. Run on a vertex-synced
+    state; 0xFFFFFFFF marks dead rows.
+
+    Per round each shard pulls the min label over its LOCAL edges, then
+    every live row's label rides the owner exchange: owners merge with a
+    min-scatter and the merged label is broadcast back over the inverse
+    all_to_all, so every copy of a vertex re-enters the next round with the
+    global value. Terminates when no OWNER row improved (exact: copies are
+    equal at round start, so any improvement lowers the owner's min)."""
+    n = int(mesh.shape[axis])
+    UMAX = jnp.uint32(0xFFFFFFFF)
+
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        src, ok_e, dst = alg.csr_edges(snap)
+        srcc = jnp.clip(src, 0, n_cap - 1)
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+        lab0 = jnp.where(rowlive, g.vt.ids[:, 1], UMAX)
+
+        def impl(rtgt, fwd, bwd):
+            def cond(c):
+                _, changed, it = c
+                return changed & (it < max_iters)
+
+            def step(c):
+                lab, _, it = c
+                cand = jnp.where(ok_e, lab[srcc], UMAX)
+                pull = jnp.full((n_cap + 1,), UMAX, jnp.uint32).at[
+                    dst].min(cand)
+                nl = jnp.minimum(lab, pull[:n_cap])
+                merged = jnp.full((n_cap + 1, 1), UMAX, jnp.uint32).at[
+                    rtgt].min(fwd(nl[:, None]))
+                back, okb = bwd(merged)
+                nl = jnp.where(okb, back[:, 0], nl)
+                ch = jax.lax.psum(jnp.any(mine & (nl < lab)).astype(
+                    jnp.int32), axis) > 0
+                return nl, ch, it + 1
+
+            lab, _, _ = jax.lax.while_loop(
+                cond, step, (lab0, jnp.bool_(True), jnp.int32(0)))
+            return lab
+
+        lab = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                 frontier_budget, impl)
+        return jnp.where(rowlive, lab, UMAX)[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_sssp(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+              m_cap: int, max_iters: int = 64,
+              frontier_budget: Optional[int] = None):
+    """Build ``sssp(state, source_key) -> float32[n_shards, n_cap]`` —
+    distributed Bellman-Ford (non-negative weights). Per round each shard
+    relaxes its LOCAL edges (``min(dist[u] + w)`` — the same float op the
+    single-shard reference applies), owners merge candidates with a
+    min-scatter, and the merged distance is broadcast back to every copy.
+    min is exact in floating point and the edge set is partitioned, so the
+    per-round distances — and the round count — are BIT-EXACT against
+    ``analytics.sssp``. Run on a vertex-synced state; INF = unreachable."""
+    n = int(mesh.shape[axis])
+    INF = alg.INF
+
+    def body(state, source_key):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        src, ok_e, dst = alg.csr_edges(snap)
+        srcc = jnp.clip(src, 0, n_cap - 1)
+        w_e = jnp.where(ok_e, snap.weight, 0.0)
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+
+        off0 = sort_mod.lookup(sspec, g.sort, source_key[None, :])[0]
+        row = jnp.arange(n_cap, dtype=jnp.int32)
+        dist0 = jnp.where((row == off0) & rowlive, 0.0, INF)
+
+        def impl(rtgt, fwd, bwd):
+            def cond(c):
+                _, changed, it = c
+                return changed & (it < max_iters)
+
+            def step(c):
+                dist, _, it = c
+                cand = jnp.where(ok_e, dist[srcc] + w_e, INF)
+                relax = jnp.full((n_cap + 1,), INF).at[dst].min(cand)
+                nd = jnp.minimum(dist, relax[:n_cap])
+                merged = jnp.full((n_cap + 1, 1), INF).at[rtgt].min(
+                    fwd(nd[:, None]))
+                back, okb = bwd(merged)
+                nd = jnp.where(okb, back[:, 0], nd)
+                ch = jax.lax.psum(jnp.any(mine & (nd < dist)).astype(
+                    jnp.int32), axis) > 0
+                return nd, ch, it + 1
+
+            dist, _, _ = jax.lax.while_loop(
+                cond, step, (dist0, jnp.bool_(True), jnp.int32(0)))
+            return dist
+
+        dist = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                  frontier_budget, impl)
+        return jnp.where(rowlive, dist, INF)[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_bc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+            m_cap: int, max_depth: int = 32,
+            frontier_budget: Optional[int] = None):
+    """Build ``bc(state, source_keys) -> float32[n_shards, n_cap]`` —
+    distributed Brandes betweenness (unweighted, sampled sources; the
+    distributed analogue of ``analytics.bc``). All sources run TOGETHER:
+    depth/sigma/delta carry an S column per source, so each forward level /
+    backward level is one value exchange regardless of S.
+
+    Forward (per level): shards accumulate path counts along local edges,
+    owners sum the per-shard partials, mark newly-reached rows, and
+    broadcast (depth, sigma) back to every copy. Backward (per level):
+    dependency contributions accumulate at local SOURCE rows (edges live in
+    the source row's shard), owners sum, and delta is broadcast back.
+    Owner-side sums add per-shard partials in slot order — deterministic,
+    but a different association than the single-shard segment-sum, so
+    compare with a small float tolerance (depths are exact)."""
+    n = int(mesh.shape[axis])
+
+    def body(state, source_keys):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        S = source_keys.shape[0]
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        src, ok_e, dst = alg.csr_edges(snap)
+        srcc = jnp.clip(src, 0, n_cap - 1)
+        dstc = jnp.clip(dst, 0, n_cap - 1)
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+
+        roffs = sort_mod.lookup(sspec, g.sort, source_keys)        # (S,)
+        row = jnp.arange(n_cap, dtype=jnp.int32)
+        is_src = (row[:, None] == roffs[None, :]) & (roffs[None, :] >= 0) \
+            & rowlive[:, None]
+
+        def impl(rtgt, fwd, bwd):
+            depth0 = jnp.where(is_src, 0, -1)
+            sigma0 = jnp.where(is_src, 1.0, 0.0)
+
+            def sync_cols(vals):
+                """Owner rows -> every copy (values already merged)."""
+                back, okb = bwd(jnp.concatenate(
+                    [vals, jnp.zeros((1, vals.shape[1]), vals.dtype)]))
+                return back, okb
+
+            def fwd_lvl(i, c):
+                depth, sigma = c
+                on_lvl = depth[srcc] == i
+                add_l = jnp.zeros((n_cap + 1, S)).at[dst].add(
+                    jnp.where(ok_e[:, None] & on_lvl,
+                              sigma[srcc], 0.0))[:n_cap]
+                add = jnp.zeros((n_cap + 1, S)).at[rtgt].add(
+                    fwd(add_l))[:n_cap]
+                newly = (add > 0) & (depth < 0)
+                depth = jnp.where(newly, i + 1, depth)
+                sigma = jnp.where(depth == i + 1, sigma + add, sigma)
+                back, okb = sync_cols(jnp.concatenate(
+                    [depth.astype(jnp.float32), sigma], axis=1))
+                depth = jnp.where(okb[:, None],
+                                  back[:, :S].astype(jnp.int32), depth)
+                sigma = jnp.where(okb[:, None], back[:, S:], sigma)
+                return depth, sigma
+
+            depth, sigma = jax.lax.fori_loop(0, max_depth, fwd_lvl,
+                                             (depth0, sigma0))
+
+            du = depth[srcc]
+            dv = depth[dstc]
+            sig_ratio = sigma[srcc] / jnp.maximum(sigma[dstc], 1.0)
+
+            def bwd_lvl(k, delta):
+                lvl = max_depth - 1 - k
+                onedge = ok_e[:, None] & (du == lvl) & (dv == lvl + 1)
+                contrib = jnp.where(onedge,
+                                    sig_ratio * (1.0 + delta[dstc]), 0.0)
+                acc_l = jnp.zeros((n_cap, S)).at[srcc].add(contrib)
+                acc = jnp.zeros((n_cap + 1, S)).at[rtgt].add(
+                    fwd(acc_l))[:n_cap]
+                delta = delta + acc
+                back, okb = sync_cols(delta)
+                return jnp.where(okb[:, None], back, delta)
+
+            delta = jax.lax.fori_loop(0, max_depth, bwd_lvl,
+                                      jnp.zeros((n_cap, S)))
+            delta = jnp.where(is_src, 0.0, delta)
+            return jnp.sum(delta, axis=1)
+
+        vals = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                  frontier_budget, impl)
+        return jnp.where(mine, vals, 0.0)[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
                         out_specs=P(axis), check_rep=False)
     return sharded
 
@@ -654,4 +919,4 @@ def collect_owner_values(state: GraphState, values, n_shards: int) -> dict:
     mask = (dt == 0) & (owner == np.arange(ids.shape[0])[:, None])
     vids = (ids[..., 0].astype(np.uint64) << np.uint64(32)) | \
         ids[..., 1].astype(np.uint64)
-    return dict(zip(vids[mask].tolist(), vals[mask]))
+    return dict(zip(vids[mask].tolist(), vals[mask].tolist()))

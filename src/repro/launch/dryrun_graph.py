@@ -1,15 +1,21 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Dry-run of the PAPER'S OWN technique at pod scale — three modes:
+"""Dry-run of the PAPER'S OWN technique at pod scale — three modes, all
+driven through the unified ``repro.api.GraphStore`` front door:
 
-* ``--mode ingest`` (default): distributed RadixGraph ingestion (vertex-space
-  sharding, routed batched edge ops) on 256/512-shard meshes;
-* ``--mode analytics``: the versioned read path — per-shard CSR snapshot +
-  level-synchronous BFS and PageRank with frontier/inflow exchange over the
-  mesh axis, compiled as one fused SPMD program each;
+* ``--mode ingest`` (default): the ShardedStore's distributed ingestion
+  program (vertex-space sharding, routed batched edge ops) lowered on
+  256/512-shard meshes;
+* ``--mode analytics``: registered mesh analytics — BFS and PageRank by
+  default, ``--algs wcc,sssp,bc`` for the full registry — compiled as one
+  fused SPMD program each;
 * ``--mode serve``: actually RUNS a small mixed read/write workload through
   ``serve.graph_service`` on placeholder shards and records throughput.
+
+Collective-byte totals count conditional (compacted/dense fallback)
+branches at the TAKEN-BRANCH UPPER BOUND (max-bytes branch, never the
+sum) — see ``launch.hlo.BRANCH_RULE``, recorded in every artifact.
 
   PYTHONPATH=src python -m repro.launch.dryrun_graph [--shards 256]
       [--mode ingest|analytics|serve] [--batch-per-shard 4096] [--no-pack]
@@ -22,15 +28,9 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
-from repro.core import edgepool as ep
-from repro.core.sort import SortSpec
-from repro.core.sort_optimizer import optimize_sort
-from repro.dist.graph_engine import (make_apply_edges, make_bfs,
-                                     make_pagerank, make_sharded_state,
-                                     make_sync_vertices)
-from repro.launch.hlo import cost_dict, parse_collectives
+from repro.api import make_store
+from repro.launch.hlo import BRANCH_RULE, cost_dict, parse_collectives
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
     "results" / "dryrun"
@@ -53,21 +53,28 @@ def _compile_stats(compiled, dt: float) -> dict:
                    ("argument_size_in_bytes", "temp_size_in_bytes")
                    if hasattr(mem, k)},
         "collective_bytes": cb, "collective_counts": cc,
+        "collective_branch_rule": BRANCH_RULE,
         "compile_s": round(dt, 1),
     }
 
 
-def _mode_ingest(args, mesh, sspec, pspec, n):
-    B = args.batch_per_shard * n
-    state_struct = jax.eval_shape(
-        lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
-    apply_fn = make_apply_edges(sspec, pspec, mesh, "data",
-                                pack=not args.no_pack,
-                                route_budget=args.route_budget)
-    fn = jax.jit(apply_fn, donate_argnums=(0,))
+def _make_store(args, n):
+    return make_store(
+        "sharded", n_shards=n, n_per_shard=args.n_per_shard,
+        expected_n=args.n_per_shard, sort_capacity_factor=4.0,
+        pool_blocks=args.n_per_shard // 2, block_size=16, k_max=256,
+        dmax=4096, batch=args.batch_per_shard * n,
+        m_cap=args.n_per_shard * 4, pack=not args.no_pack,
+        route_budget=args.route_budget,
+        frontier_budget=args.frontier_budget)
+
+
+def _mode_ingest(args, store, n):
+    B = store.batch
+    fn = store.apply_program(donate=True)
     t0 = time.time()
     compiled = fn.lower(
-        state_struct,
+        store.state_struct(),
         jax.ShapeDtypeStruct((B, 2), jnp.uint32),
         jax.ShapeDtypeStruct((B, 2), jnp.uint32),
         jax.ShapeDtypeStruct((B,), jnp.float32),
@@ -91,30 +98,33 @@ def _mode_ingest(args, mesh, sspec, pspec, n):
     return rec
 
 
-def _mode_analytics(args, mesh, sspec, pspec, n):
-    m_cap = args.n_per_shard * 4
-    state_struct = jax.eval_shape(
-        lambda: make_sharded_state(sspec, pspec, n, args.n_per_shard))
+def _mode_analytics(args, store, n):
+    state_struct = store.state_struct()
     key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    keys_struct = jax.ShapeDtypeStruct((16, 2), jnp.uint32)
     fb = args.frontier_budget
+    # per-alg (static knobs, dynamic-arg structs) — all registry entries
+    catalog = {
+        "bfs": (dict(max_iters=16), (state_struct, key_struct)),
+        "pagerank": (dict(iters=8), (state_struct,)),
+        "wcc": (dict(max_iters=16), (state_struct,)),
+        "sssp": (dict(max_iters=16), (state_struct, key_struct)),
+        "bc": (dict(max_depth=8), (state_struct, keys_struct)),
+    }
     recs = {}
-    for alg_name, build, in_structs in (
-            ("bfs", lambda: make_bfs(sspec, pspec, mesh, "data", m_cap,
-                                     max_iters=16, frontier_budget=fb),
-             (state_struct, key_struct)),
-            ("pagerank", lambda: make_pagerank(sspec, pspec, mesh, "data",
-                                               m_cap, iters=8,
-                                               frontier_budget=fb),
-             (state_struct,))):
+    for alg_name in args.algs.split(","):
+        static, in_structs = catalog[alg_name]
         t0 = time.time()
-        compiled = jax.jit(build()).lower(*in_structs).compile()
+        compiled = store.analytics_program(alg_name, **static).lower(
+            *in_structs).compile()
         recs[alg_name] = _compile_stats(compiled, time.time() - t0)
     tag = "" if fb is None else f"__frontier{fb}"
     rec = {
-        "arch": "radixgraph-analytics", "shape": f"mcap{m_cap}",
+        "arch": "radixgraph-analytics", "shape": f"mcap{store.m_cap}",
         "mesh": f"graph{n}" + ("" if fb is None else f"+frontier{fb}"),
-        "chips": n, "m_cap": m_cap, "frontier_budget": fb,
+        "chips": n, "m_cap": store.m_cap, "frontier_budget": fb,
         "status": "ok", "kind": "graph", "algs": recs,
+        "collective_branch_rule": BRANCH_RULE,
     }
     _record(f"radixgraph-analytics__{n}shards{tag}.json", rec)
     for a, r in recs.items():
@@ -125,9 +135,11 @@ def _mode_analytics(args, mesh, sspec, pspec, n):
     return rec
 
 
-def _mode_serve(args, mesh, sspec, pspec, n):
+def _mode_serve(args, n):
     # real execution (placeholder devices): a small Fig.-11-style mixed
     # read/write stream through the query service, epochs sealed per step
+    # (builds its own service-sized store; the compile-mode store params
+    # --batch-per-shard/--route-budget do not apply here)
     from repro.serve.graph_service import (GraphQueryService,
                                            drive_mixed_workload)
     rng = np.random.default_rng(0)
@@ -135,10 +147,11 @@ def _mode_serve(args, mesh, sspec, pspec, n):
     ids = rng.choice(2 ** 32, n_v, replace=False).astype(np.uint64)
     src, dst = rng.choice(ids, n_e), rng.choice(ids, n_e)
     w = rng.uniform(0.5, 2, n_e).astype(np.float32)
-    svc = GraphQueryService(
-        n_shards=n, n_per_shard=8192, expected_n=4096, pool_blocks=16384,
-        block_size=16, dmax=2048, k_max=128, write_batch=512 * n,
-        query_batch=128 * n)
+    svc_store = make_store(
+        "sharded", n_shards=n, n_per_shard=8192, expected_n=4096,
+        pool_blocks=16384, block_size=16, dmax=2048, k_max=128,
+        batch=512 * n, query_batch=128 * n)
+    svc = GraphQueryService(svc_store)
     dt, reads = drive_mixed_workload(svc, src, dst, w, ids[:128 * n])
     tb = svc.submit_query("bfs", source=int(src[0]))
     svc.run()
@@ -172,18 +185,17 @@ def main(argv=None):
     ap.add_argument("--frontier-budget", type=int, default=None,
                     help="compacted frontier/inflow exchange budget "
                          "(analytics mode)")
+    ap.add_argument("--algs", default="bfs,pagerank",
+                    help="analytics mode: comma list from the registry "
+                         "(bfs,pagerank,wcc,sssp,bc)")
     args = ap.parse_args(argv)
 
     n = args.shards
-    mesh = jax.make_mesh((n,), ("data",), devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,))
-    cfg = optimize_sort(args.n_per_shard, 32, 5)
-    sspec = SortSpec.from_config(cfg, args.n_per_shard,
-                                 capacity_factor=4.0)
-    pspec = ep.PoolSpec(n_blocks=args.n_per_shard // 2, block_size=16,
-                        k_max=256, dmax=4096)
-    return {"ingest": _mode_ingest, "analytics": _mode_analytics,
-            "serve": _mode_serve}[args.mode](args, mesh, sspec, pspec, n)
+    if args.mode == "serve":
+        return _mode_serve(args, n)
+    store = _make_store(args, n)
+    return {"ingest": _mode_ingest,
+            "analytics": _mode_analytics}[args.mode](args, store, n)
 
 
 if __name__ == "__main__":

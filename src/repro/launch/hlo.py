@@ -6,6 +6,12 @@ extracts trip counts from their condition computations (the max integer
 constant — lax.scan lowers to ``compare(iter, L)``), and multiplies each
 body's collective bytes through the call graph. Shapes in partitioned HLO
 are per-device, so totals are per-device bytes on the wire.
+
+Conditionals (``lax.cond`` — e.g. the compacted-/dense-exchange fallback)
+execute exactly ONE branch, so summing every branch would overstate wire
+traffic. Each conditional contributes the single branch with the LARGEST
+total collective bytes — a taken-branch upper bound (``BRANCH_RULE``),
+tight whenever one branch dominates (the dense fallback), never the sum.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ def cost_dict(compiled) -> Dict[str, float]:
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
+# how conditional branches enter the totals (recorded in dryrun artifacts)
+BRANCH_RULE = "taken-branch-upper-bound(max)"
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
                 "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
                 "f64": 8, "c64": 8, "c128": 16}
@@ -78,12 +86,14 @@ def parse_collectives(hlo_text: str) -> Tuple[Dict[str, float],
     direct_b: Dict[str, Dict[str, float]] = {}
     direct_c: Dict[str, Dict[str, float]] = {}
     children: Dict[str, list] = {}
+    branches: Dict[str, list] = {}   # per block: conditional branch groups
     trip_of: Dict[str, int] = {}
 
     for name, lines in blocks.items():
         db = {c: 0.0 for c in COLLECTIVES}
         dc = {c: 0.0 for c in COLLECTIVES}
         ch = []
+        br = []
         for s in lines:
             m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*)", s)
             if not m:
@@ -116,13 +126,18 @@ def parse_collectives(hlo_text: str) -> Tuple[Dict[str, float],
                     ch.append((cm.group(1), max(trip, 1)))
             for cm in _CALL_RE.finditer(rest):
                 ch.append((cm.group(1), 1))
-            for cm in re.finditer(r"(?:true_computation|false_computation)"
-                                  r"=%?([\w\.\-]+)", rest):
-                ch.append((cm.group(1), 1))
+            # conditional branches: ONE executes — group them so the totals
+            # take the max-bytes branch, not the sum of all branches
+            group = [cm.group(1) for cm in re.finditer(
+                r"(?:true_computation|false_computation)=%?([\w\.\-]+)",
+                rest)]
             for cm in re.finditer(r"branch_computations=\{([^}]*)\}", rest):
-                for b in cm.group(1).split(","):
-                    ch.append((b.strip().lstrip("%"), 1))
-        direct_b[name], direct_c[name], children[name] = db, dc, ch
+                group += [b.strip().lstrip("%")
+                          for b in cm.group(1).split(",")]
+            if group:
+                br.append(group)
+        direct_b[name], direct_c[name] = db, dc
+        children[name], branches[name] = ch, br
 
     # --- DFS with memo ---
     memo_b: Dict[str, Dict[str, float]] = {}
@@ -141,6 +156,12 @@ def parse_collectives(hlo_text: str) -> Tuple[Dict[str, float],
             for c in COLLECTIVES:
                 tb[c] += mult * cb[c]
                 tc[c] += mult * cc[c]
+        for group in branches[name]:
+            totals = [total(b, stack + (name,)) for b in group]
+            bb, bc_ = max(totals, key=lambda t: sum(t[0].values()))
+            for c in COLLECTIVES:
+                tb[c] += bb[c]
+                tc[c] += bc_[c]
         memo_b[name], memo_c[name] = tb, tc
         return tb, tc
 

@@ -1,29 +1,27 @@
-"""Concurrent graph query/update service over the sharded RadixGraph engine.
+"""Concurrent graph query/update service over a ``repro.api.GraphStore``.
 
 The serving analogue of the paper's Fig. 11 mixed workload, mirroring the
-continuous-batching shape of ``serve.engine``: requests enter admission
-queues, the writer ingests fixed-size micro-batches through the distributed
-engine (one fused route->exchange->apply program per step), and every read is
-pinned to the latest SEALED epoch — an immutable functional state published
-by ``seal_epoch()``. Because states are pure pytrees, sealing is O(1)
-(a reference), a heavy analytics query can never observe a half-applied
-batch, and the writer never waits for readers (RapidStore-style decoupling).
+continuous-batching shape of ``serve.engine`` — but storage-agnostic: the
+service takes ANY GraphStore (the sharded mesh engine, the single-shard
+``LocalStore``, or a future backend) and only schedules. Requests enter
+admission queues, the writer ingests fixed-size micro-batches through
+``store.apply`` (the store pads to its static batch, so the jit cache
+stays warm), and every read is pinned to the latest SEALED epoch — an O(1)
+``store.capture()`` handle onto the immutable functional state. A heavy
+analytics query can never observe a half-applied batch, and the writer
+never waits for readers (RapidStore-style decoupling).
 
 Scheduling per ``step()``:
 
-1. **write phase** — up to ``write_batch`` queued edge ops are padded into
-   one static-shape batch and applied (reuses the jit cache every step);
-   when the batch created vertices, an INCREMENTAL vertex sync (only rows
-   allocated since the last sync, compacted exchange with dense fallback)
-   registers them at their owners — so sealed epochs are always
-   analytics-ready and ``_synced_sealed`` reuses the sealed reference
-   instead of recomputing the full registration per epoch;
-2. **read phase** — up to ``query_batch`` queued queries are answered against
-   the sealed epoch: degree queries ride one batched owner-routed lookup,
-   BFS / PageRank run the distributed level-synchronous kernels on a lazily
-   vertex-synced copy of the sealed state and are memoized per epoch;
+1. **write phase** — up to ``write_batch`` queued edge ops ship as one
+   ``OpBatch``; the sharded store's write path keeps the live state
+   vertex-synced incrementally, so sealed epochs are analytics-ready;
+2. **read phase** — up to ``query_batch`` queued queries are answered
+   against the sealed epoch: degree queries ride ``ReadOp`` batches, any
+   REGISTERED analytics (BFS / PageRank / WCC / SSSP / BC / k-hop) runs
+   through ``store.analytics`` and is memoized per epoch;
 3. **seal phase** — every ``seal_every`` steps the live state is published
-   as the new read epoch.
+   as the new read epoch (``store.capture()``).
 """
 from __future__ import annotations
 
@@ -32,18 +30,10 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import edgepool as ep
-from repro.core.keys import pack_keys
-from repro.core.sort import SortSpec
-from repro.core.sort_optimizer import optimize_sort
-from repro.dist.graph_engine import (collect_owner_values, make_apply_edges,
-                                     make_bfs, make_khop_counts,
-                                     make_pagerank, make_sharded_state,
-                                     make_sync_vertices)
+from repro.api import AnalyticsOp, GraphStore, OpBatch, ReadOp
+from repro.api.registry import analytics_spec
 
 __all__ = ["GraphQueryService", "Query", "drive_mixed_workload"]
 
@@ -69,123 +59,83 @@ def drive_mixed_workload(svc: "GraphQueryService", src, dst, w, query_ids):
 @dataclasses.dataclass
 class Query:
     ticket: int
-    kind: str                      # 'degree' | 'bfs' | 'pagerank'
+    kind: str                    # 'degree' | any registered analytics name
     ids: Optional[np.ndarray] = None     # degree: queried vertex IDs
-    source: Optional[int] = None         # bfs: source vertex ID
+    params: Optional[dict] = None        # analytics parameters
 
 
 class GraphQueryService:
-    """Micro-batching reader/writer front-end for the sharded graph engine."""
+    """Micro-batching reader/writer front-end over a GraphStore."""
 
-    def __init__(self, n_shards: int = 1, *, n_per_shard: int = 8192,
-                 expected_n: int = 4096, key_bits: int = 32,
-                 pool_blocks: int = 16384, block_size: int = 16,
-                 k_max: int = 128, dmax: int = 2048,
-                 write_batch: int = 1024, query_batch: int = 256,
-                 seal_every: int = 1, max_pending: int = 65536,
-                 m_cap: Optional[int] = None, bfs_iters: int = 32,
-                 pr_iters: int = 20, damping: float = 0.85,
-                 undirected: bool = False, axis: str = "data",
-                 sync_incremental: bool = True,
-                 sync_budget: Optional[int] = None,
-                 frontier_budget: Optional[int] = None):
-        assert write_batch % n_shards == 0 and query_batch % n_shards == 0, \
-            "micro-batch sizes must be divisible by the shard count"
-        from jax.sharding import AxisType
-        self.n_shards = n_shards
-        self.key_bits = key_bits
-        self.write_batch = write_batch
-        self.query_batch = query_batch
+    def __init__(self, store: GraphStore, *, write_batch: Optional[int] = None,
+                 query_batch: Optional[int] = None, seal_every: int = 1,
+                 max_pending: int = 65536, bfs_iters: int = 32,
+                 pr_iters: int = 20, damping: float = 0.85):
+        self.store = store
+        self.n_shards = store.n_shards
+        self.write_batch = write_batch or getattr(
+            store, "batch", None) or store.graph.batch
+        self.query_batch = query_batch or getattr(store, "query_batch", 256)
         self.seal_every = seal_every
         self.max_pending = max_pending
-        self.undirected = undirected
-        self.sync_incremental = sync_incremental
-        self.mesh = jax.make_mesh((n_shards,), (axis,),
-                                  devices=jax.devices()[:n_shards],
-                                  axis_types=(AxisType.Auto,))
-        cfg = optimize_sort(expected_n, key_bits, 5)
-        self.sspec = SortSpec.from_config(cfg, n_per_shard)
-        self.pspec = ep.PoolSpec(n_blocks=pool_blocks, block_size=block_size,
-                                 k_max=k_max, dmax=dmax)
-        m_cap = m_cap or self.pspec.capacity_entries
-        self.m_cap = m_cap
-        self.state = make_sharded_state(self.sspec, self.pspec, n_shards,
-                                        n_per_shard)
-        self._apply = jax.jit(make_apply_edges(self.sspec, self.pspec,
-                                               self.mesh, axis))
-        self._degree = jax.jit(make_khop_counts(self.sspec, self.pspec,
-                                                self.mesh, axis))
-        self._sync = jax.jit(make_sync_vertices(self.sspec, self.pspec,
-                                                self.mesh, axis))
-        if sync_budget is None:
-            # a write step creates at most 2 * write_batch rows globally
-            sync_budget = min(n_per_shard,
-                              2 * write_batch // n_shards + 64)
-        self._sync_inc = jax.jit(make_sync_vertices(
-            self.sspec, self.pspec, self.mesh, axis, budget=sync_budget,
-            incremental=True))
-        self._bfs = jax.jit(make_bfs(self.sspec, self.pspec, self.mesh, axis,
-                                     m_cap, max_iters=bfs_iters,
-                                     frontier_budget=frontier_budget))
-        self._pagerank = jax.jit(make_pagerank(self.sspec, self.pspec,
-                                               self.mesh, axis,
-                                               m_cap, iters=pr_iters,
-                                               damping=damping,
-                                               frontier_budget=frontier_budget))
+        self.bfs_iters = bfs_iters
+        self.pr_iters = pr_iters
+        self.damping = damping
 
-        # sealed read epoch (immutable pytree reference, O(1) to publish)
+        # sealed read epoch (immutable capture, O(1) to publish)
         self.epoch = 0
-        self._sealed = self.state
-        self._sealed_synced = None          # lazy vertex-synced copy
-        self._analytics_cache: Dict = {}    # (kind, arg) -> result, per epoch
+        self._sealed = store.capture()
+        self._analytics_cache: Dict = {}    # op.cache_key() -> result
+        self._epoch_sync_counted = False
 
-        # vertex-creation tracking for the incremental sync: rows allocated
-        # on each shard as of the last sync (vertex rows are never recycled
-        # here — the service has no vertex deletes — so growth of num_rows
-        # is exactly "vertices were created since")
-        self._synced_rows = np.zeros((n_shards,), np.int32)
-
-        self._writes = collections.deque()  # (src_keys, dst_keys, w) chunks
+        self._writes = collections.deque()  # (src, dst, w) id chunks
         self.pending_writes = 0
         self._reads = collections.deque()
         self._next_ticket = 0
         self.results: Dict[int, object] = {}
-        self.stats = dict(steps=0, ops_applied=0, ops_dropped=0,
-                          queries_answered=0, epochs_sealed=0,
-                          sync_runs=0, sync_skips=0, sync_reused=0)
+        self._stats = dict(steps=0, queries_answered=0, epochs_sealed=0,
+                           sync_reused=0)
+
+    @property
+    def stats(self) -> dict:
+        """Service counters merged with the store's — op accounting
+        (ops_applied/ops_dropped, sync_runs/skips) lives on the store and
+        is never shadowed here (keys are disjoint by construction)."""
+        return {**getattr(self.store, "stats", {}), **self._stats}
 
     # ---- admission ----
-    def _keys(self, ids) -> np.ndarray:
-        return np.asarray(pack_keys(np.asarray(ids, np.uint64),
-                                    self.key_bits))
-
     def submit_update(self, src, dst, weight=None) -> bool:
         """Enqueue edge ops (weight 0 = delete). False = backpressure."""
         src = np.asarray(src, np.uint64)
         dst = np.asarray(dst, np.uint64)
         w = np.ones(len(src), np.float32) if weight is None \
             else np.asarray(weight, np.float32)
-        if self.undirected:
-            s2 = np.empty(2 * len(src), np.uint64)
-            d2 = np.empty_like(s2)
-            w2 = np.empty(2 * len(src), np.float32)
-            s2[0::2], s2[1::2] = src, dst
-            d2[0::2], d2[1::2] = dst, src
-            w2[0::2], w2[1::2] = w, w
-            src, dst, w = s2, d2, w2
         if self.pending_writes + len(src) > self.max_pending:
             return False
-        self._writes.append((self._keys(src), self._keys(dst), w))
+        self._writes.append((src, dst, w))
         self.pending_writes += len(src)
         return True
 
-    def submit_query(self, kind: str, ids=None, source=None) -> Optional[int]:
-        """Enqueue a read. Returns a ticket (see ``results``) or None on
-        backpressure."""
-        assert kind in ("degree", "bfs", "pagerank"), kind
+    def _build_op(self, q: Query) -> AnalyticsOp:
+        params = dict(q.params or {})
+        if q.kind == "bfs":
+            params.setdefault("max_iters", self.bfs_iters)
+        elif q.kind == "pagerank":
+            params.setdefault("iters", self.pr_iters)
+            params.setdefault("damping", self.damping)
+        return AnalyticsOp(q.kind, params)
+
+    def submit_query(self, kind: str, ids=None, **params) -> Optional[int]:
+        """Enqueue a read: ``'degree'`` (needs ``ids``) or any analytics
+        name in the registry (``source=``/``sources=``/knobs as kwargs).
+        Returns a ticket (see ``results``) or None on backpressure."""
         # reject malformed queries at admission, not mid-step
-        assert kind != "degree" or ids is not None, "degree query needs ids"
-        assert kind != "bfs" or source is not None, "bfs query needs a source"
+        if kind == "degree":
+            assert ids is not None, "degree query needs ids"
+        else:
+            spec = analytics_spec(kind)       # raises on unknown kinds
+            for pname, _ in spec.dyn:
+                assert pname in params, f"{kind} query needs {pname}="
         if len(self._reads) >= self.max_pending:
             return None
         t = self._next_ticket
@@ -193,55 +143,25 @@ class GraphQueryService:
         self._reads.append(Query(
             ticket=t, kind=kind,
             ids=None if ids is None else np.asarray(ids, np.uint64),
-            source=None if source is None else int(source)))
+            params=params or None))
         return t
 
     # ---- epochs ----
     def seal_epoch(self) -> int:
-        """Publish the live state as the read epoch. O(1): functional states
-        are immutable, so sealing is a reference, not a copy."""
-        self._sealed = self.state
-        self._sealed_synced = None
+        """Publish the live state as the read epoch. O(1): functional
+        states are immutable, so sealing is a capture, not a copy."""
+        self._sealed = self.store.capture()
         self._analytics_cache = {}
+        self._epoch_sync_counted = False
         self.epoch += 1
-        self.stats["epochs_sealed"] += 1
+        self._stats["epochs_sealed"] += 1
         return self.epoch
 
     @property
     def epoch_lag(self) -> int:
         """Operations ingested since the read epoch was sealed (staleness
         bound a reader observes)."""
-        live = int(np.asarray(self.state.pool.clock)[0])
-        sealed = int(np.asarray(self._sealed.pool.clock)[0])
-        return live - sealed
-
-    def _maybe_sync_live(self):
-        """Eager incremental vertex sync, run right after a write
-        micro-batch: only rows created since the last sync are registered at
-        their owner shards (compacted exchange with dense fallback), so
-        every sealed epoch is already analytics-ready. Skipped — no
-        collective at all — when the batch created no vertices."""
-        rows = np.asarray(self.state.vt.num_rows)
-        if np.array_equal(rows, self._synced_rows):
-            self.stats["sync_skips"] += 1
-            return
-        self.state = self._sync_inc(self.state,
-                                    jnp.asarray(self._synced_rows))
-        self._synced_rows = np.asarray(self.state.vt.num_rows)
-        self.stats["sync_runs"] += 1
-
-    def _synced_sealed(self):
-        if self._sealed_synced is None:
-            if self.sync_incremental:
-                # the write path keeps the live state registered as it goes,
-                # so sealing needs NO per-epoch recompute: the sealed
-                # reference is reused as the synced state (ROADMAP item)
-                self.stats["sync_reused"] += 1
-                self._sealed_synced = self._sealed
-            else:
-                self.stats["sync_runs"] += 1
-                self._sealed_synced = self._sync(self._sealed)
-        return self._sealed_synced
+        return self.store.clock() - self.store.clock(at=self._sealed)
 
     # ---- scheduling ----
     def _write_phase(self):
@@ -250,58 +170,34 @@ class GraphQueryService:
         B = self.write_batch
         parts, need = [], B
         while self._writes and need > 0:
-            sk, dk, w = self._writes[0]
+            s, d, w = self._writes[0]
             if len(w) <= need:
                 parts.append(self._writes.popleft())
                 need -= len(w)
             else:
-                parts.append((sk[:need], dk[:need], w[:need]))
-                self._writes[0] = (sk[need:], dk[need:], w[need:])
+                parts.append((s[:need], d[:need], w[:need]))
+                self._writes[0] = (s[need:], d[need:], w[need:])
                 need = 0
         take = B - need
         self.pending_writes -= take
-        sk = np.zeros((B, 2), np.uint32)
-        dk = np.zeros((B, 2), np.uint32)
-        w = np.zeros((B,), np.float32)
-        mask = np.zeros((B,), bool)
-        sk[:take] = np.concatenate([p[0] for p in parts])
-        dk[:take] = np.concatenate([p[1] for p in parts])
-        w[:take] = np.concatenate([p[2] for p in parts])
-        mask[:take] = True
-        self.state, dropped = self._apply(self.state, jnp.asarray(sk),
-                                          jnp.asarray(dk), jnp.asarray(w),
-                                          jnp.asarray(mask))
-        self.stats["ops_applied"] += take
-        self.stats["ops_dropped"] += int(np.asarray(dropped).sum())
-        if self.sync_incremental:
-            self._maybe_sync_live()
-
-    def _answer_degree(self, q: Query):
-        Q = self.query_batch
-        out = np.zeros((len(q.ids),), np.int32)
-        keys = self._keys(q.ids)
-        for lo in range(0, len(q.ids), Q):
-            chunk = keys[lo:lo + Q]
-            buf = np.zeros((Q, 2), np.uint32)
-            buf[:len(chunk)] = chunk
-            cnt = np.asarray(self._degree(self._sealed, jnp.asarray(buf)))
-            out[lo:lo + len(chunk)] = cnt[:len(chunk)]
-        return out
+        self.store.apply(OpBatch.edges(
+            np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]),
+            np.concatenate([p[2] for p in parts])))
 
     def _answer_analytics(self, q: Query):
-        key = (q.kind, q.source)
+        op = self._build_op(q)
+        key = op.cache_key()
         if key not in self._analytics_cache:
-            synced = self._synced_sealed()
-            if q.kind == "bfs":
-                sk = self._keys(np.array([q.source], np.uint64))[0]
-                depth = self._bfs(synced, jnp.asarray(sk))
-                val = collect_owner_values(synced, np.asarray(depth),
-                                           self.n_shards)
-            else:
-                pr = self._pagerank(synced)
-                val = collect_owner_values(synced, np.asarray(pr),
-                                           self.n_shards)
-            self._analytics_cache[key] = val
+            if not self._epoch_sync_counted:
+                # the sharded write path keeps the live state registered
+                # incrementally, so the sealed capture is reused as the
+                # analytics-ready state — no per-epoch sync recompute
+                if getattr(self.store, "sync_incremental", False):
+                    self._stats["sync_reused"] += 1
+                self._epoch_sync_counted = True
+            self._analytics_cache[key] = self.store.analytics(
+                op, at=self._sealed)
         return self._analytics_cache[key]
 
     def _read_phase(self):
@@ -311,17 +207,18 @@ class GraphQueryService:
             # a cold analytics run fills the read budget; a memo hit on the
             # sealed epoch is nearly free and never deferred to a new epoch
             warm = q.kind != "degree" and \
-                (q.kind, q.source) in self._analytics_cache
+                self._build_op(q).cache_key() in self._analytics_cache
             if served >= self.query_batch and not warm:
                 break
             self._reads.popleft()
             if q.kind == "degree":
-                self.results[q.ticket] = self._answer_degree(q)
+                self.results[q.ticket] = self.store.read(
+                    ReadOp("degree", ids=q.ids), at=self._sealed)
                 served += max(1, len(q.ids))
             else:
                 self.results[q.ticket] = self._answer_analytics(q)
                 served += 1 if warm else self.query_batch
-            self.stats["queries_answered"] += 1
+            self._stats["queries_answered"] += 1
 
     def step(self):
         """One mixed read/write scheduling round (Fig. 11 concurrency):
@@ -329,8 +226,8 @@ class GraphQueryService:
         then seal if due."""
         self._write_phase()
         self._read_phase()
-        self.stats["steps"] += 1
-        if self.seal_every and self.stats["steps"] % self.seal_every == 0:
+        self._stats["steps"] += 1
+        if self.seal_every and self._stats["steps"] % self.seal_every == 0:
             self.seal_epoch()
 
     def claim(self, ticket: int):

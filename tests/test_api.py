@@ -1,0 +1,236 @@
+"""The unified GraphStore front door: typed IR validation, LocalStore
+equivalence with the raw RadixGraph, epoch-handle reads, the analytics
+registry, and (slow) the cross-backend parity suite — LocalStore and a
+2-shard ShardedStore must return IDENTICAL results for the same
+OpBatch/ReadOp/AnalyticsOp sequence, including WCC/SSSP/BC."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (AnalyticsOp, LocalStore, OpBatch, ReadOp,
+                       available_analytics, available_backends, make_store)
+
+
+def _stream(seed=3, n_ids=80, n_ops=600):
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(2 ** 32, n_ids, replace=False).astype(np.uint64)
+    s0, d0 = rng.choice(ids, n_ops // 2), rng.choice(ids, n_ops // 2)
+    src = np.concatenate([s0, d0])       # symmetric insertion (WCC-ready)
+    dst = np.concatenate([d0, s0])
+    wh = rng.uniform(0.5, 2, n_ops // 2).astype(np.float32)
+    w = np.concatenate([wh, wh])
+    w[rng.random(n_ops) < 0.1] = 0.0
+    return ids, src, dst, w
+
+
+def _local():
+    return make_store("local", n_max=2048, key_bits=32, expected_n=256,
+                      batch=512, pool_blocks=8192, block_size=8, dmax=512,
+                      k_max=64)
+
+
+# ---- IR validation ----
+
+def test_ir_validation():
+    with pytest.raises(ValueError):
+        OpBatch(kind="nope", src=[1], dst=[2])
+    with pytest.raises(ValueError):
+        OpBatch.edges([1, 2], [3])                  # length mismatch
+    with pytest.raises(ValueError):
+        OpBatch(kind="add_vertices")                # ids missing
+    with pytest.raises(ValueError):
+        ReadOp("degree")                            # ids missing
+    with pytest.raises(ValueError):
+        ReadOp("frobnicate")
+    b = OpBatch.edges([1, 2], [3, 4])
+    assert len(b) == 2 and b.weight.dtype == np.float32
+    k1 = AnalyticsOp("bfs", {"source": 5}).cache_key()
+    k2 = AnalyticsOp("bfs", {"source": 5}).cache_key()
+    k3 = AnalyticsOp("bfs", {"source": 6}).cache_key()
+    assert k1 == k2 and k1 != k3
+    ka = AnalyticsOp("bc", {"sources": np.array([1, 2])}).cache_key()
+    kb = AnalyticsOp("bc", {"sources": np.array([1, 3])}).cache_key()
+    assert ka != kb
+
+
+def test_registry_and_backends():
+    assert {"local", "sharded"} <= set(available_backends())
+    # the full distributed-analytics registry (ROADMAP gap closed)
+    assert {"bfs", "pagerank", "wcc", "sssp", "bc", "khop"} <= \
+        set(available_analytics(distributed=True))
+    assert "triangle_count" in available_analytics()
+    with pytest.raises(KeyError):
+        make_store("nope")
+    with pytest.raises(KeyError):
+        _local().analytics(AnalyticsOp("nope"))
+
+
+# ---- LocalStore vs the raw RadixGraph ----
+
+def test_local_store_matches_radixgraph():
+    from repro import analytics as A
+    import jax.numpy as jnp
+    from repro.core.radixgraph import RadixGraph
+
+    ids, src, dst, w = _stream()
+    store = _local()
+    res = store.apply(OpBatch.edges(src, dst, w))
+    assert res.applied == len(src) and res.dropped == 0
+
+    g = RadixGraph(n_max=2048, key_bits=32, expected_n=256, batch=512,
+                   pool_blocks=8192, block_size=8, dmax=512, k_max=64)
+    g.apply_ops(src, dst, w)
+    assert store.read(ReadOp("num_edges")) == g.num_edges
+    assert store.read(ReadOp("num_vertices")) == g.num_vertices
+    off = g.lookup(ids)
+    assert np.array_equal(store.read(ReadOp("lookup", ids=ids)), off >= 0)
+
+    snap = g.snapshot(m_cap=store.m_cap)
+    depth = store.analytics(AnalyticsOp("bfs", {"source": int(src[0]),
+                                                "max_iters": 64}))
+    s0 = int(g.lookup(np.array([src[0]], np.uint64))[0])
+    ref = np.asarray(A.bfs(snap, jnp.int32(s0), max_iters=64))
+    for i, vid in enumerate(ids):
+        assert depth[int(vid)] == int(ref[int(off[i])])
+
+    # degrees agree with per-id neighbor lists
+    deg = store.read(ReadOp("degree", ids=ids[:16]))
+    nbrs = store.read(ReadOp("neighbors", ids=ids[:16]))
+    assert [len(a) for a, _ in nbrs] == deg.tolist()
+
+
+def test_local_vertex_batches_and_absent_reads():
+    store = _local()
+    store.apply(OpBatch.add_vertices([7, 8, 9]))
+    assert store.read(ReadOp("num_vertices")) == 3
+    assert store.read(ReadOp("lookup", ids=[7, 8, 9, 10])).tolist() == \
+        [True, True, True, False]
+    store.apply(OpBatch.delete_vertices([8]))
+    assert store.read(ReadOp("lookup", ids=[8]))[0] == np.False_
+    # absent vertices: degree 0, empty neighbors, unreachable analytics
+    assert store.read(ReadOp("degree", ids=[404]))[0] == 0
+    assert len(store.read(ReadOp("neighbors", ids=[404]))[0][0]) == 0
+    d = store.analytics(AnalyticsOp("bfs", {"source": 404}))
+    assert all(v == -1 for v in d.values())
+    k = store.analytics(AnalyticsOp("khop", {"sources": [7, 404], "k": 2}))
+    assert k[1] == 0
+
+
+def test_epoch_capture_reads():
+    ids, src, dst, w = _stream(seed=11)
+    store = _local()
+    store.apply(OpBatch.edges(src[:300], dst[:300], w[:300]))
+    h = store.capture()
+    ne0 = store.read(ReadOp("num_edges"))
+    deg0 = store.read(ReadOp("degree", ids=ids[:8]))
+    store.apply(OpBatch.edges(src[300:], dst[300:], w[300:]))
+    # the captured epoch still answers the pre-write state
+    assert store.read(ReadOp("num_edges"), at=h) == ne0
+    assert np.array_equal(store.read(ReadOp("degree", ids=ids[:8]), at=h),
+                          deg0)
+    assert store.clock(at=h) <= store.clock()
+    pr_old = store.analytics(AnalyticsOp("pagerank", {"iters": 5}), at=h)
+    pr_new = store.analytics(AnalyticsOp("pagerank", {"iters": 5}))
+    assert set(pr_old) <= set(pr_new)
+
+
+def test_service_runs_on_local_backend():
+    """The query service is storage-agnostic: a LocalStore serves the same
+    mixed workload the sharded engine does."""
+    from repro.serve.graph_service import GraphQueryService
+
+    ids, src, dst, w = _stream(seed=5)
+    svc = GraphQueryService(_local(), query_batch=64)
+    svc.submit_update(src, dst, w)
+    svc.run()                                 # drain + seal the epoch
+    t = svc.submit_query("degree", ids=ids[:16])
+    tw = svc.submit_query("wcc")
+    svc.run()
+    ref = _local()
+    ref.apply(OpBatch.edges(src, dst, w))
+    assert np.array_equal(svc.claim(t),
+                          ref.read(ReadOp("degree", ids=ids[:16])))
+    assert svc.claim(tw) == ref.analytics(AnalyticsOp("wcc"))
+
+
+# ---- cross-backend parity (subprocess: needs 2 devices) ----
+
+@pytest.mark.slow
+def test_cross_backend_parity_subprocess():
+    """LocalStore and a 2-shard ShardedStore must answer the SAME
+    OpBatch/ReadOp/AnalyticsOp sequence identically: lookups, degrees,
+    neighbors, counts, BFS, PageRank, WCC, SSSP, BC and k-hop (the new
+    registry entries asserted bit-exact / <1e-5 for float-sum BC)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np
+        from repro.api import AnalyticsOp, OpBatch, ReadOp, make_store
+
+        rng = np.random.default_rng(3)
+        ids = rng.choice(2**32, 80, replace=False).astype(np.uint64)
+        B = 600
+        s0, d0 = rng.choice(ids, B // 2), rng.choice(ids, B // 2)
+        src = np.concatenate([s0, d0]); dst = np.concatenate([d0, s0])
+        wh = rng.uniform(0.5, 2, B // 2).astype(np.float32)
+        w = np.concatenate([wh, wh])
+        w[rng.random(B) < 0.1] = 0.0
+
+        stores = {
+            "local": make_store("local", n_max=2048, key_bits=32,
+                                expected_n=256, batch=512, pool_blocks=8192,
+                                block_size=8, dmax=512, k_max=64),
+            "sharded": make_store("sharded", n_shards=2, n_per_shard=2048,
+                                  expected_n=256, pool_blocks=8192,
+                                  block_size=8, dmax=512, k_max=64,
+                                  batch=512, query_batch=64),
+        }
+        results = {}
+        for name, st in stores.items():
+            assert st.apply(OpBatch.edges(src, dst, w)).dropped == 0
+            res = {}
+            res["lookup"] = st.read(ReadOp("lookup", ids=ids)).tolist()
+            res["degree"] = st.read(ReadOp("degree", ids=ids)).tolist()
+            res["nv"] = st.read(ReadOp("num_vertices"))
+            res["ne"] = st.read(ReadOp("num_edges"))
+            res["neighbors"] = [sorted(zip(a.tolist(), b.tolist()))
+                                for a, b in st.read(
+                                    ReadOp("neighbors", ids=ids[:10]))]
+            res["bfs"] = st.analytics(AnalyticsOp(
+                "bfs", {"source": int(src[0]), "max_iters": 64}))
+            res["pr"] = st.analytics(AnalyticsOp("pagerank", {"iters": 15}))
+            res["wcc"] = st.analytics(AnalyticsOp("wcc"))
+            res["sssp"] = st.analytics(AnalyticsOp(
+                "sssp", {"source": int(src[0]), "max_iters": 64}))
+            res["bc"] = st.analytics(AnalyticsOp(
+                "bc", {"sources": ids[:8], "max_depth": 16}))
+            for k in (1, 2, 3):
+                res[f"khop{k}"] = st.analytics(AnalyticsOp(
+                    "khop", {"sources": ids[:16], "k": k})).tolist()
+            res["bfs_ghost"] = st.analytics(AnalyticsOp(
+                "bfs", {"source": 123456789}))
+            res["deg_ghost"] = st.read(
+                ReadOp("degree", ids=np.array([123456789],
+                                              np.uint64))).tolist()
+            results[name] = res
+        a, b = results["local"], results["sharded"]
+        assert set(a) == set(b)
+        for k in a:
+            if k in ("pr", "bc"):     # float-sum accumulation order
+                assert set(a[k]) == set(b[k]), k
+                err = max(abs(a[k][x] - b[k][x]) / max(1.0, abs(a[k][x]))
+                          for x in a[k])
+                assert err < 1e-5, (k, err)
+            else:
+                assert a[k] == b[k], (k, a[k], b[k])
+        print("PARITY-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                          "PYTHONPATH": "src"},
+                         cwd=str(__import__("pathlib").Path(
+                             __file__).resolve().parents[1]), timeout=600)
+    assert "PARITY-OK" in out.stdout, out.stderr[-2000:]

@@ -119,14 +119,23 @@ def test_defrag_is_semantic_noop(rng):
 
 def test_amortized_o1_defrag_count(rng):
     """Theorem 2 proxy: the number of defrags grows logarithmically, not
-    linearly, with the op count."""
+    linearly, with the op count (the pool's ``defrags`` counter is exact —
+    each global rebuild increments it once)."""
     g = mk(pool_blocks=2048)
+    n_batches = 0
     for wave in range(8):
         src = rng.integers(0, 50, 256).astype(np.uint64)
         dst = rng.integers(0, 50, 256).astype(np.uint64)
         w = rng.uniform(0.5, 2, 256).astype(np.float32)
         g.apply_ops(src, dst, w)
+        n_batches += 1
     assert not g.overflowed
+    # far fewer rebuilds than batches (2x capacity growth => O(log d) per
+    # vertex); an explicit defrag() adds exactly one
+    assert g.num_defrags < n_batches
+    before = g.num_defrags
+    g.defrag()
+    assert g.num_defrags == before + 1
 
 
 # --------------------------------------------------------------------------

@@ -1,10 +1,12 @@
 """Concurrent graph query/update service: sealed-epoch read pinning, mixed
-scheduling, distributed analytics answers vs a single-shard reference."""
+scheduling, distributed analytics answers vs a single-shard reference.
+The service drives storage exclusively through ``repro.api.GraphStore``."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import analytics as A
+from repro.api import make_store
 from repro.core.radixgraph import RadixGraph
 from repro.serve.graph_service import GraphQueryService
 
@@ -17,10 +19,10 @@ def served():
     src, dst = rng.choice(ids, n_e), rng.choice(ids, n_e)
     w = rng.uniform(0.5, 2, n_e).astype(np.float32)
     w[rng.random(n_e) < 0.15] = 0.0
-    svc = GraphQueryService(n_shards=1, n_per_shard=2048, expected_n=512,
-                            pool_blocks=8192, block_size=8, dmax=512,
-                            k_max=64, write_batch=256, query_batch=64,
-                            pr_iters=25)
+    store = make_store("sharded", n_shards=1, n_per_shard=2048,
+                       expected_n=512, pool_blocks=8192, block_size=8,
+                       dmax=512, k_max=64, batch=256, query_batch=64)
+    svc = GraphQueryService(store, pr_iters=25)
     svc.submit_update(src, dst, w)
     svc.run()
     oracle = {}
@@ -137,10 +139,11 @@ def test_sync_reused_across_epochs_without_vertex_creation(served):
 
 
 def test_backpressure():
-    svc = GraphQueryService(n_shards=1, n_per_shard=512, expected_n=128,
-                            pool_blocks=1024, block_size=8, dmax=128,
-                            k_max=32, write_batch=64, query_batch=32,
-                            max_pending=100)
+    svc = GraphQueryService(
+        make_store("sharded", n_shards=1, n_per_shard=512, expected_n=128,
+                   pool_blocks=1024, block_size=8, dmax=128, k_max=32,
+                   batch=64, query_batch=32),
+        max_pending=100)
     ok = svc.submit_update(np.arange(90, dtype=np.uint64),
                            np.arange(90, dtype=np.uint64) + 1)
     assert ok
