@@ -44,12 +44,40 @@ OUT = ROOT / "BENCH_ingest.json"
 
 # one jit cache across batch configs would need one batch size; each config
 # builds its own graph, so keep the stream modest and let compile warm out.
-FULL = dict(n_vertices=8192, n_ops=65536, hub_n_hubs=48, hub_k_big=(16, 64))
-SMOKE = dict(n_vertices=512, n_ops=4096, hub_n_hubs=8, hub_k_big=(2, 64))
+# ``hub_ops`` gives the hub stream enough batches that every k_big budget
+# below the hub count pays at least one overflow defrag (the smoke job
+# asserts it — the spike path must actually run in CI).
+FULL = dict(n_vertices=8192, n_ops=65536, hub_ops=65536, hub_n_hubs=48,
+            hub_k_big=(16, 64))
+SMOKE = dict(n_vertices=512, n_ops=4096, hub_ops=12288, hub_n_hubs=24,
+             hub_k_big=(16, 64))
 
 
 def _throughput(n_ops: int, dt: float) -> float:
     return round(n_ops / dt, 1)
+
+
+def _latency_stats(lat: np.ndarray) -> dict:
+    """Per-batch wall-time percentiles (ms) — the spike metric: a
+    triggered defrag shows up as the gap between p50 and p99/max."""
+    ms = np.asarray(lat) * 1000.0
+    return {"p50_ms": round(float(np.percentile(ms, 50)), 2),
+            "p99_ms": round(float(np.percentile(ms, 99)), 2),
+            "max_ms": round(float(ms.max()), 2)}
+
+
+def _batched_apply(store, src, dst, w, batch):
+    """Apply the stream one device batch per call, timing each batch."""
+    from repro.api import OpBatch
+    lat = []
+    for lo in range(0, len(src), batch):
+        t0 = time.perf_counter()
+        res = store.apply(OpBatch.edges(
+            src[lo:lo + batch], dst[lo:lo + batch],
+            None if w is None else w[lo:lo + batch]))
+        lat.append(time.perf_counter() - t0)
+        assert res.dropped == 0
+    return np.asarray(lat)
 
 
 def _mixed_weights(n: int, seed: int = 1) -> np.ndarray:
@@ -85,7 +113,9 @@ def _local_store(n_vertices: int, batch: int, **over):
 
 def bench_single(n_vertices: int, n_ops: int, batch: int, seed: int = 0,
                  weights=None, **store_over):
-    """1-shard ingest: a batched powerlaw stream through ``LocalStore``."""
+    """1-shard ingest: a batched powerlaw stream through ``LocalStore``,
+    timed per device batch so the latency PERCENTILES (not just the mean
+    throughput) are a recorded artifact."""
     from benchmarks.common import edge_stream
     from repro.api import OpBatch, ReadOp
 
@@ -94,37 +124,75 @@ def bench_single(n_vertices: int, n_ops: int, batch: int, seed: int = 0,
     store = _local_store(n_vertices, batch, **store_over)
     store.apply(OpBatch.edges(src[:batch], dst[:batch],
                               None if w is None else w[:batch]))  # warm
-    t0 = time.perf_counter()
-    res = store.apply(OpBatch.edges(src[batch:], dst[batch:],
-                                    None if w is None else w[batch:]))
-    dt = time.perf_counter() - t0
-    assert res.dropped == 0 and not store.graph.overflowed
+    lat = _batched_apply(store, src[batch:], dst[batch:],
+                         None if w is None else w[batch:], batch)
+    dt = float(lat.sum())
+    assert not store.graph.overflowed
     return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
             "updates_per_s": _throughput(n_ops, dt),
+            **_latency_stats(lat),
+            "tiles_scanned": store.stats["tiles_scanned"],
             "live_edges": store.read(ReadOp("num_edges"))}
 
 
 def bench_hub(n_vertices: int, n_ops: int, batch: int, n_hubs: int,
-              k_big: int, seed: int = 0):
+              k_big: int, seed: int = 0, defrag_impl: str = "auto"):
     """Hub-heavy tier-L stress: same stream at two ``k_big`` budgets —
-    the small one records overflow-defrag fallbacks, the raised one stays
+    the small one records overflow-defrag fallbacks (and their wall-time
+    spike via ``defrag_ms`` / the p99-over-p50 gap), the raised one stays
     on the fast path (each unit of k_big costs one dmax-width compaction
     row per batch)."""
     from repro.api import OpBatch, ReadOp
 
     src, dst, _ = _hub_stream(n_vertices, n_ops + batch, n_hubs, seed)
-    store = _local_store(n_vertices, batch, k_big=k_big)
+    store = _local_store(n_vertices, batch, k_big=k_big,
+                         defrag_impl=defrag_impl)
     store.apply(OpBatch.edges(src[:batch], dst[:batch]))          # warm
     d0 = store.graph.num_defrags
-    t0 = time.perf_counter()
-    res = store.apply(OpBatch.edges(src[batch:], dst[batch:]))
-    dt = time.perf_counter() - t0
-    assert res.dropped == 0 and not store.graph.overflowed
+    lat = _batched_apply(store, src[batch:], dst[batch:], None, batch)
+    dt = float(lat.sum())
+    assert not store.graph.overflowed
     return {"batch": batch, "ops": n_ops, "n_hubs": n_hubs,
             "k_big": k_big, "seconds": round(dt, 3),
             "updates_per_s": _throughput(n_ops, dt),
+            **_latency_stats(lat),
             "overflow_defrags": store.graph.num_defrags - d0,
+            "defrag_ms": round(store.graph.defrag_ms, 1),
+            "tiles_scanned": store.stats["tiles_scanned"],
             "live_edges": store.read(ReadOp("num_edges"))}
+
+
+def bench_defrag(n_vertices: int, n_ops: int, batch: int, n_hubs: int,
+                 seed: int = 0, iters: int = 3):
+    """Explicit-rebuild microbench: the SAME hub-loaded state rebuilt by
+    the dense entry-scatter reference and by the streaming block-row
+    path — the before/after of the defrag spike, isolated from the
+    ingest around it (``k_big`` is raised so loading never rebuilds)."""
+    import jax
+
+    from repro.api import OpBatch
+    from repro.core import radixgraph as rg
+
+    out = {}
+    for impl in ("dense", "stream"):
+        store = _local_store(n_vertices, batch, k_big=64, defrag_impl=impl)
+        src, dst, _ = _hub_stream(n_vertices, n_ops, n_hubs, seed)
+        _batched_apply(store, src, dst, None, batch)
+        g = store.graph
+        st = g.state
+        r = rg._defrag(g.sort_spec, g.pool_spec, st)   # compile + warm
+        jax.block_until_ready(r)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            r = rg._defrag(g.sort_spec, g.pool_spec, st)
+            jax.block_until_ready(r)
+            ts.append(time.perf_counter() - t0)
+        out[impl] = {"seconds": round(float(np.median(ts)), 3),
+                     "defrags_during_load": g.num_defrags}
+    out["speedup"] = round(out["dense"]["seconds"] /
+                           max(out["stream"]["seconds"], 1e-9), 1)
+    return out
 
 
 def _shard_worker(n_vertices: int, n_ops: int, batch: int, n_shards: int,
@@ -158,6 +226,8 @@ def _shard_worker(n_vertices: int, n_ops: int, batch: int, n_shards: int,
     assert store.stats["ops_dropped"] == 0, store.stats
     return {"batch": batch, "ops": n_ops, "seconds": round(dt, 3),
             "updates_per_s": _throughput(n_ops, dt), "shards": n_shards,
+            "tiles_scanned": store.stats["tiles_scanned"],
+            "defrags": store.stats["defrags"],
             "kind": "mixed" if mixed else "insert"}
 
 
@@ -203,13 +273,25 @@ def run(smoke: bool = False, record: str = "after"):
     results["mixed"]["four_shard_B4096"] = r
     print(f"mixed 4-shard  B=4096: {r['updates_per_s']:.0f} updates/s")
     # hub-heavy tier-L budget: small k_big falls back to defrag, raised
-    # k_big rides the fast path — record both sides of the knob
+    # k_big rides the fast path — record both sides of the knob, plus the
+    # per-batch latency spike the triggered rebuilds cost
     for kb in scale["hub_k_big"]:
-        r = bench_hub(nv, no, 4096, scale["hub_n_hubs"], kb)
+        r = bench_hub(nv, scale["hub_ops"], 4096, scale["hub_n_hubs"], kb)
         results["hub"][f"k_big{kb}"] = r
         print(f"hub({scale['hub_n_hubs']} hubs) k_big={kb}: "
               f"{r['updates_per_s']:.0f} updates/s, "
-              f"{r['overflow_defrags']} overflow defrags")
+              f"{r['overflow_defrags']} overflow defrags "
+              f"({r['defrag_ms']} ms), p50 {r['p50_ms']} / "
+              f"p99 {r['p99_ms']} ms")
+        if smoke and kb < scale["hub_n_hubs"]:
+            # the CI smoke must actually exercise the overflow-defrag
+            # path — a budget below the hub count has to rebuild
+            assert r["overflow_defrags"] >= 1, r
+    # the defrag spike itself, dense reference vs streaming rebuild
+    r = bench_defrag(nv, scale["hub_ops"], 4096, scale["hub_n_hubs"])
+    results["defrag"] = r
+    print(f"defrag: dense {r['dense']['seconds']}s vs stream "
+          f"{r['stream']['seconds']}s ({r['speedup']}x)")
 
     doc = {}
     if OUT.exists():

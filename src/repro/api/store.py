@@ -19,6 +19,7 @@ live state. Sealing an epoch in the serving layer is just ``capture()``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Protocol, runtime_checkable
 
 import jax
@@ -101,7 +102,8 @@ class LocalStore:
         self.n_shards = 1
         self.m_cap = m_cap or self.graph.pool_spec.capacity_entries
         self._seq = 0
-        self.stats = dict(ops_applied=0, ops_dropped=0)
+        self.stats = dict(ops_applied=0, ops_dropped=0, defrags=0,
+                          defrag_ms=0.0, tiles_scanned=0)
 
     # ---- mutation ----
     def apply(self, batch: OpBatch) -> ApplyResult:
@@ -122,6 +124,11 @@ class LocalStore:
             res = ApplyResult(len(batch), int(g.state.vt.overflow) - o0)
         self.stats["ops_applied"] += res.applied
         self.stats["ops_dropped"] += res.dropped
+        # maintenance counters ride every write result: the write path's
+        # spike/scan accounting is a recorded artifact, not a debug log
+        self.stats["defrags"] = g.num_defrags
+        self.stats["defrag_ms"] = round(g.defrag_ms, 3)
+        self.stats["tiles_scanned"] = g.tiles_scanned
         return res
 
     # ---- epochs ----
@@ -311,8 +318,10 @@ class ShardedStore:
         self._snap_cache = None        # (state-ref, per-shard snapshots)
         self._host_cache = None        # (state-ref, host id/row view)
         self._full_sync_cache = None   # (state-ref, synced-state) pair
+        self._seen_defrags = 0
         self.stats = dict(ops_applied=0, ops_dropped=0,
-                          sync_runs=0, sync_skips=0)
+                          sync_runs=0, sync_skips=0, defrags=0,
+                          defrag_ms=0.0, tiles_scanned=0)
 
     @property
     def state(self):
@@ -395,16 +404,26 @@ class ShardedStore:
             psk[:n], pdk[:n], pw[:n] = sk[lo:lo + n], dk[lo:lo + n], \
                 w[lo:lo + n]
             mask[:n] = True
+            t0 = time.perf_counter()
             self.state, d = fn(self.state, jnp.asarray(psk),
                                jnp.asarray(pdk), jnp.asarray(pw),
                                jnp.asarray(mask))
-            dropped += int(np.asarray(d).sum())
+            dropped += int(np.asarray(d).sum())   # also syncs the batch
+            dsum = int(np.asarray(self.state.pool.defrags).sum())
+            if dsum != self._seen_defrags:        # some shard rebuilt
+                self.stats["defrag_ms"] = round(
+                    self.stats["defrag_ms"] +
+                    (time.perf_counter() - t0) * 1000.0, 3)
+                self._seen_defrags = dsum
         self._seq += 1
         self._snap_cache = self._host_cache = None
         # raw submitted ops (undirected doubling is an internal detail),
         # so accounting matches ApplyResult and the local backend
         self.stats["ops_applied"] += len(batch)
         self.stats["ops_dropped"] += dropped
+        self.stats["defrags"] = self._seen_defrags
+        self.stats["tiles_scanned"] = int(
+            np.asarray(self.state.pool.tiles_scanned).sum())
         if self.sync_incremental:
             self._maybe_sync_live()
         return ApplyResult(len(batch), dropped)

@@ -59,6 +59,14 @@ class PoolSpec:
     k_big: int = 16
     append_impl: str = "auto"   # 'ref' (jnp scatter) | 'pallas' fused kernel
     compact_impl: str = "auto"
+    # global-rebuild strategy: 'stream' (default) runs the block-row
+    # streaming rebuild — size-segmented per-vertex row compaction
+    # (kernels defrag_rows) + whole-block extent writes, falling back to
+    # the dense entry-scatter rebuild whenever a size segment overflows
+    # its static budget or a vertex outgrew dmax; 'dense' forces the old
+    # full-pool lexsort rebuild (the bit-exact reference, kept for the
+    # parity property tests and before/after benchmarks).
+    defrag_impl: str = "auto"   # 'auto'/'stream' | 'dense'
     # edge-storage policy (baseline paradigms on the same substrate):
     #  'snaplog' — the paper: dedup compaction, log segment = snapshot size
     #  'grow'    — log-structured (LiveGraph/GTX-style): no dedup, double cap
@@ -84,6 +92,10 @@ class EdgePool(NamedTuple):
     live_dirty: jnp.ndarray  # int32 scalar — 1 when live_m needs a recount
     defrags: jnp.ndarray   # int32 scalar — global rebuilds so far (hub-heavy
     #                        streams exceeding k_big per batch show up here)
+    tiles_scanned: jnp.ndarray  # int32 scalar — cumulative pool tiles the
+    #                        bounded append visits (touched extents + landed
+    #                        slots per batch, NOT tiles x batches: the
+    #                        counter certifies the prefetched scan bound)
 
 
 def make_edge_pool(spec: PoolSpec) -> EdgePool:
@@ -95,7 +107,7 @@ def make_edge_pool(spec: PoolSpec) -> EdgePool:
         ts=jnp.zeros((nb, bs), jnp.int32),
         owner=jnp.full((nb,), -1, jnp.int32),
         next_block=z, garbage=z, clock=jnp.ones((), jnp.int32), overflow=z,
-        live_m=z, live_dirty=z, defrags=z,
+        live_m=z, live_dirty=z, defrags=z, tiles_scanned=z,
     )
 
 
@@ -388,27 +400,88 @@ def _compact_vertices(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
 
 
 # --------------------------------------------------------------------------
-# global defragmentation — vectorized rebuild, GC, vertex-offset recycling
+# global defragmentation — streaming block-row rebuild, GC, vertex-offset
+# recycling (dense entry-scatter rebuild kept as the bit-exact reference)
 # --------------------------------------------------------------------------
 
-def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
-           incoming: jnp.ndarray | None = None):
-    """Rebuild the pool compactly in vertex order (CSR-like layout).
+def _rebuild_layout(spec: PoolSpec, vt: VertexTable, d_cnt: jnp.ndarray,
+                    incoming: jnp.ndarray):
+    """New extent layout of a rebuild: each live vertex with content (or
+    pending ``incoming`` ops) gets ``cap = snapB + max(snapB, incomingB,
+    1)`` blocks (2d discipline), laid out in vertex-row order."""
+    bs = spec.block_size
+    snapB = _cdiv(d_cnt, bs)
+    has_any = (d_cnt > 0) | (incoming > 0)
+    active_row = vt.del_time == 0
+    if spec.policy == "sorted":
+        base_logB = jnp.full_like(snapB, spec.buf_blocks)
+    else:
+        base_logB = jnp.maximum(snapB, 1)
+    logB = jnp.where(active_row & has_any,
+                     jnp.maximum(base_logB, _cdiv(incoming, bs)), 0)
+    blocks = jnp.where(active_row, snapB + logB, 0)
+    bstart = jnp.cumsum(blocks) - blocks
+    return blocks, bstart, jnp.sum(blocks), active_row
 
-    * last-writer-wins on (owner, dst) by timestamp, tombstones dropped;
-    * edges from/to deleted vertices dropped;
-    * deleted vertex rows recycled into the free ring (the paper's epoch-safe
-      purge — offsets are only reused after the rebuild, so stale extent
-      references cannot resurrect);
-    * each live vertex gets ``cap = snapB + max(snapB, incomingB, 1)`` blocks
-      (2d discipline, pre-sized for ``incoming`` pending ops per offset).
-    """
+
+def _rebuild_finalize(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                      new_dst, new_w, new_t, d_cnt, blocks, bstart,
+                      total_blocks, live_cnt, active_row):
+    """Shared rebuild tail: block ownership via interval mapping, deleted
+    vertex rows recycled into the free ring (the paper's epoch-safe purge —
+    offsets are only reused after the rebuild, so stale extent references
+    cannot resurrect), vertex table + pool bookkeeping. The rebuild is the
+    live counter's resynchronization point: ``live_m`` becomes exact and
+    any dirtiness (vertex deletes, dropped ops) is healed here."""
+    bs = spec.block_size
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+
+    bidx = jnp.arange(nb, dtype=jnp.int32)
+    vown = jnp.searchsorted(bstart + blocks, bidx, side="right").astype(jnp.int32)
+    vownc = jnp.clip(vown, 0, n_cap - 1)
+    inside = (bidx < total_blocks) & (bidx >= bstart[vownc]) & (blocks[vownc] > 0)
+    new_owner = jnp.where(inside, vownc, -1)
+
+    deleted = vt.del_time > 0
+    del_idx = jnp.nonzero(deleted, size=n_cap, fill_value=n_cap)[0].astype(jnp.int32)
+    n_del = jnp.sum(deleted.astype(jnp.int32))
+    r = jnp.arange(n_cap, dtype=jnp.int32)
+    q_pos = (vt.free_tail + r) % n_cap
+    q_tgt = jnp.where(r < n_del, q_pos, n_cap)
+    free_q = vt.free_q.at[q_tgt].set(del_idx, mode="drop")
+    dtgt = jnp.where(deleted, r, n_cap)
+    del_time = vt.del_time.at[dtgt].set(-1, mode="drop")
+
+    vt = vt._replace(
+        deg=jnp.where(active_row, d_cnt, 0),
+        size=jnp.where(active_row, d_cnt, 0),
+        cap=jnp.where(active_row, blocks * bs, 0),
+        start_block=jnp.where(active_row & (blocks > 0), bstart, -1),
+        free_q=free_q,
+        free_tail=vt.free_tail + n_del,
+        del_time=del_time,
+    )
+    pool = pool._replace(dst=new_dst, weight=new_w, ts=new_t, owner=new_owner,
+                         next_block=total_blocks,
+                         garbage=jnp.zeros((), jnp.int32),
+                         live_m=live_cnt,
+                         live_dirty=jnp.zeros((), jnp.int32),
+                         defrags=pool.defrags + 1)
+    return pool, vt
+
+
+def _defrag_dense(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                  incoming: jnp.ndarray):
+    """Dense rebuild reference: flatten every pool lane, one full-pool
+    3-key lexsort, entry-level scatters. O(N log N) in the pool CAPACITY —
+    the streaming rebuild below is the production path; this stays as the
+    bit-exact semantic reference and the fallback for states the size
+    segments cannot express (a vertex past dmax, segment overflow)."""
     bs = spec.block_size
     nb = pool.dst.shape[0]
     n_cap = vt.size.shape[0]
     N = nb * bs
-    if incoming is None:
-        incoming = jnp.zeros((n_cap,), jnp.int32)
 
     own = jnp.repeat(pool.owner, bs)
     d = pool.dst.reshape(-1)
@@ -449,18 +522,8 @@ def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     # ---- per-vertex live counts & new extents ----
     so_keep = jnp.where(keep, so, n_cap)
     d_cnt = jnp.zeros((n_cap,), jnp.int32).at[so_keep].add(1, mode="drop")
-    snapB = _cdiv(d_cnt, bs)
-    has_any = (d_cnt > 0) | (incoming > 0)
-    active_row = vt.del_time == 0
-    if spec.policy == "sorted":
-        base_logB = jnp.full_like(snapB, spec.buf_blocks)
-    else:
-        base_logB = jnp.maximum(snapB, 1)
-    logB = jnp.where(active_row & has_any,
-                     jnp.maximum(base_logB, _cdiv(incoming, bs)), 0)
-    blocks = jnp.where(active_row, snapB + logB, 0)
-    bstart = jnp.cumsum(blocks) - blocks
-    total_blocks = jnp.sum(blocks)
+    blocks, bstart, total_blocks, active_row = _rebuild_layout(
+        spec, vt, d_cnt, incoming)
 
     # ---- write entries into fresh arrays ----
     # rank of each kept entry within its owner = position among keeps with
@@ -484,41 +547,172 @@ def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     new_t = jnp.zeros((nb, bs), jnp.int32).at[tgt_blk, tgt_lane].set(
         stv, mode="drop")
 
-    # ---- block ownership via interval mapping ----
-    bidx = jnp.arange(nb, dtype=jnp.int32)
-    # vertex whose extent contains block b: searchsorted over bstart
-    vown = jnp.searchsorted(bstart + blocks, bidx, side="right").astype(jnp.int32)
-    vownc = jnp.clip(vown, 0, n_cap - 1)
-    inside = (bidx < total_blocks) & (bidx >= bstart[vownc]) & (blocks[vownc] > 0)
-    new_owner = jnp.where(inside, vownc, -1)
+    return _rebuild_finalize(spec, pool, vt, new_dst, new_w, new_t, d_cnt,
+                             blocks, bstart, total_blocks, live_cnt,
+                             active_row)
 
-    # ---- recycle deleted vertex rows into the free ring ----
-    deleted = vt.del_time > 0
-    del_idx = jnp.nonzero(deleted, size=n_cap, fill_value=n_cap)[0].astype(jnp.int32)
-    n_del = jnp.sum(deleted.astype(jnp.int32))
-    r = jnp.arange(n_cap, dtype=jnp.int32)
-    q_pos = (vt.free_tail + r) % n_cap
-    q_tgt = jnp.where(r < n_del, q_pos, n_cap)
-    free_q = vt.free_q.at[q_tgt].set(del_idx, mode="drop")
-    dtgt = jnp.where(deleted, r, n_cap)
-    del_time = vt.del_time.at[dtgt].set(-1, mode="drop")
 
-    vt = vt._replace(
-        deg=jnp.where(active_row, d_cnt, 0),
-        size=jnp.where(active_row, d_cnt, 0),
-        cap=jnp.where(active_row, blocks * bs, 0),
-        start_block=jnp.where(active_row & (blocks > 0), bstart, -1),
-        free_q=free_q,
-        free_tail=vt.free_tail + n_del,
-        del_time=del_time,
-    )
-    pool = pool._replace(dst=new_dst, weight=new_w, ts=new_t, owner=new_owner,
-                         next_block=total_blocks,
-                         garbage=jnp.zeros((), jnp.int32),
-                         live_m=live_cnt,
-                         live_dirty=jnp.zeros((), jnp.int32),
-                         defrags=pool.defrags + 1)
-    return pool, vt
+def _defrag_tiers(spec: PoolSpec, n_cap: int):
+    """Static (width, budget) size segments of the streaming rebuild:
+    widths grow 8x from one block up to dmax; budgets shrink 8x from the
+    full vertex table (heavy-tailed degree distributions put almost every
+    vertex in the first segment), floored so hub-heavy states — up to
+    4*k_big over-window vertices — still stream. A segment whose live
+    population exceeds its budget falls back to the dense rebuild, so the
+    budgets trade streaming coverage for bounded gather shapes."""
+    bs = spec.block_size
+    top = max(_cdiv(spec.dmax, bs) * bs, bs)
+    tiers = []
+    w, j = bs, 0
+    while True:
+        w = min(w, top)
+        tiers.append((w, min(n_cap, max(64, 4 * spec.k_big,
+                                        n_cap >> (3 * j)))))
+        if w >= top:
+            break
+        w, j = w * 8, j + 1
+    return tiers
+
+
+def _defrag_chunks(width: int, budget: int):
+    """Geometric chunk schedule of one size segment: (start, rows) pieces
+    doubling from ~64K gathered entries, so a segment costs O(population)
+    work at runtime — each chunk is skipped by a ``lax.cond`` unless the
+    segment's population reaches its start."""
+    c = max(32, min(budget, 65536 // max(width, 1)))
+    chunks, lo = [], 0
+    while lo < budget:
+        c = min(c, budget - lo)
+        chunks.append((lo, c))
+        lo += c
+        c *= 2
+    return chunks
+
+
+def _defrag_stream(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+                   incoming: jnp.ndarray, tiers, tier_masks):
+    """Block-row streaming rebuild: per size segment, gather each live
+    vertex's extent once, run the ``defrag_rows`` row compactor (dedup +
+    tombstone/dead-dst drop + dst-ascending emission), and write the new
+    extents as whole block rows into a fresh pool image. Segments are
+    processed in geometrically-growing chunks, each behind a ``lax.cond``
+    on the segment's population, so runtime work is proportional to the
+    extents that actually exist (within 2x), never the static budgets or
+    the pool capacity — and nothing is ever sorted across vertices: the
+    extent layout already IS the owner order. Bit-exact vs
+    ``_defrag_dense`` (asserted by the parity property test)."""
+    bs = spec.block_size
+    nb = pool.dst.shape[0]
+    n_cap = vt.size.shape[0]
+    keep_all = spec.policy == "grow"
+    dead_dst = vt.del_time != 0
+
+    d_cnt = jnp.zeros((n_cap,), jnp.int32)
+    live_cnt = jnp.zeros((), jnp.int32)
+    parts = []
+    for (W, Bj), mask in zip(tiers, tier_masks):
+        pop = jnp.sum(mask.astype(jnp.int32))
+        kidx = jnp.nonzero(mask, size=Bj, fill_value=n_cap)[0].astype(
+            jnp.int32)
+        for lo, C in _defrag_chunks(W, Bj):
+            kidx_c = jax.lax.slice(kidx, (lo,), (lo + C,))
+
+            def compact_chunk(carry, kidx_c=kidx_c, W=W):
+                d_cnt, live_cnt = carry
+                kmask = kidx_c < n_cap
+                ku = jnp.where(kmask, kidx_c, -1)
+                d0, w0, t0, ksz = _gather_vertex_entries(spec, pool, vt,
+                                                         ku, W)
+                # edges to deleted vertices drop like the dense rebuild
+                dd = jnp.where((d0 >= 0) &
+                               dead_dst[jnp.clip(d0, 0, n_cap - 1)],
+                               -1, d0)
+                cd, cw, ct, cnt, liv = kops.defrag_rows(
+                    dd, w0, t0, ksz, keep_all=keep_all, n_cap=n_cap,
+                    impl=spec.compact_impl)
+                cnt = jnp.where(kmask, cnt, 0)
+                d_cnt = d_cnt.at[jnp.where(kmask, ku, n_cap)].set(
+                    cnt, mode="drop")
+                live_cnt = live_cnt + jnp.sum(jnp.where(kmask, liv, 0))
+                return (d_cnt, live_cnt), (ku, cd, cw, ct, cnt)
+
+            def skip_chunk(carry, C=C, W=W):
+                return carry, (jnp.full((C,), -1, jnp.int32),
+                               jnp.full((C, W), -1, jnp.int32),
+                               jnp.zeros((C, W), jnp.float32),
+                               jnp.zeros((C, W), jnp.int32),
+                               jnp.zeros((C,), jnp.int32))
+
+            run = pop > lo
+            (d_cnt, live_cnt), part = jax.lax.cond(
+                run, compact_chunk, skip_chunk, (d_cnt, live_cnt))
+            parts.append((run, W, part))
+
+    blocks, bstart, total_blocks, active_row = _rebuild_layout(
+        spec, vt, d_cnt, incoming)
+
+    # fresh image: only content rows are ever written (block-row moves
+    # bounded by the live snapshot); log rows stay at the empty fill
+    img = pool._replace(dst=jnp.full((nb, bs), -1, jnp.int32),
+                        weight=jnp.zeros((nb, bs), jnp.float32),
+                        ts=jnp.zeros((nb, bs), jnp.int32))
+    for run, W, (ku, cd, cw, ct, cnt) in parts:
+        R = W // bs
+        K = ku.shape[0]
+
+        def write_chunk(im, ku=ku, cd=cd, cw=cw, ct=ct, cnt=cnt, R=R, K=K):
+            base = bstart[jnp.clip(ku, 0, n_cap - 1)]
+            rowi = jnp.arange(R, dtype=jnp.int32)[None, :]
+            row_ok = (ku >= 0)[:, None] & (rowi < _cdiv(cnt, bs)[:, None])
+            return _scatter_block_rows(
+                im, jnp.where(row_ok, base[:, None] + rowi, nb).reshape(-1),
+                cd.reshape(K * R, bs), cw.reshape(K * R, bs),
+                ct.reshape(K * R, bs))
+
+        img = jax.lax.cond(run, write_chunk, lambda im: im, img)
+
+    return _rebuild_finalize(spec, pool, vt, img.dst, img.weight, img.ts,
+                             d_cnt, blocks, bstart, total_blocks, live_cnt,
+                             active_row)
+
+
+def defrag(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
+           incoming: jnp.ndarray | None = None):
+    """Rebuild the pool compactly in vertex order (CSR-like layout).
+
+    * last-writer-wins on (owner, dst) by timestamp, tombstones dropped;
+    * edges from/to deleted vertices dropped;
+    * deleted vertex rows recycled into the free ring;
+    * each live vertex gets ``cap = snapB + max(snapB, incomingB, 1)``
+      blocks (2d discipline, pre-sized for ``incoming`` pending ops).
+
+    Dispatch: the streaming block-row rebuild handles every state whose
+    live extents fit the size segments (sizes <= dmax, segment counts
+    within budget); anything else — and ``defrag_impl='dense'`` — runs
+    the dense entry-scatter reference. Both produce identical states.
+    """
+    n_cap = vt.size.shape[0]
+    if incoming is None:
+        incoming = jnp.zeros((n_cap,), jnp.int32)
+    if spec.defrag_impl == "dense":
+        return _defrag_dense(spec, pool, vt, incoming)
+    tiers = _defrag_tiers(spec, n_cap)
+    live_row = (vt.del_time == 0) & (vt.start_block >= 0)
+    sz = jnp.where(live_row, vt.size, 0)
+    masks, fits = [], []
+    prev = 0
+    for W, Bj in tiers:
+        m = live_row & (sz > prev) & (sz <= W)
+        masks.append(m)
+        fits.append(jnp.sum(m.astype(jnp.int32)) <= Bj)
+        prev = W
+    stream_ok = jnp.all(jnp.stack(fits)) & (jnp.max(sz) <= tiers[-1][0])
+    return jax.lax.cond(
+        stream_ok,
+        lambda args: _defrag_stream(spec, args[0], args[1], incoming,
+                                    tiers, masks),
+        lambda args: _defrag_dense(spec, args[0], args[1], incoming),
+        (pool, vt))
 
 
 # --------------------------------------------------------------------------
@@ -682,23 +876,52 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
     tgt_blk = jnp.where(op_ok, start + slot // bs, nb)
 
     probe_u = jnp.where(pair_last & ~fold_hit, u2, -1)
+    p_start = jnp.where(probe_u >= 0, vt.start_block[u2c], -1)
+    p_sz = jnp.where(probe_u >= 0, vt.size[u2c], 0)
+    p_v = jnp.where(probe_u >= 0, v2, -1)
+
+    # ---- touched-tile bound: the pool tiles any probe extent or landed
+    # slot of this batch can live in. The Pallas append only VISITS these
+    # (prefetched tile list; the grid's tail revisits the last touched
+    # tile as a no-op), and ``tiles_scanned`` records the bound on both
+    # paths — probe extents are marked as [first, last] tile RANGES via a
+    # diff/cumsum cover, so even a post-jumbo extent wider than dmax stays
+    # fully covered.
+    T = kops.append_tile_rows(nb)
+    n_tiles = nb // T
+    p_rows = _cdiv(p_sz, bs)
+    has_p = (p_start >= 0) & (p_rows > 0)
+    t_first = jnp.where(has_p, p_start // T, n_tiles)
+    t_end = jnp.where(has_p, (p_start + p_rows - 1) // T + 1, n_tiles)
+    diff = jnp.zeros((n_tiles + 1,), jnp.int32).at[t_first].add(
+        1, mode="drop").at[t_end].add(-1, mode="drop")
+    touched = jnp.cumsum(diff[:n_tiles]) > 0
+    wmark = jnp.zeros((n_tiles + 1,), bool).at[
+        jnp.where(op_ok, tgt_blk // T, n_tiles)].set(True, mode="drop")
+    touched = touched | wmark[:n_tiles]
+    n_touched = jnp.sum(touched.astype(jnp.int32))
+    t_order = jnp.nonzero(touched, size=n_tiles,
+                          fill_value=0)[0].astype(jnp.int32)
+    t_pad = t_order[jnp.clip(n_touched - 1, 0, n_tiles - 1)]
+    tiles_list = jnp.where(jnp.arange(n_tiles, dtype=jnp.int32) < n_touched,
+                           t_order, t_pad)
+
     use_pallas = spec.append_impl == "pallas" or (
         spec.append_impl == "auto" and kops.default_impl() == "pallas")
     if use_pallas:
         # fused append: slot scatter + full-extent last-writer probe in one
-        # VMEM-resident pass per pool tile — exact liveness, never blind
-        p_start = jnp.where(probe_u >= 0, vt.start_block[u2c], -1)
-        p_sz = jnp.where(probe_u >= 0, vt.size[u2c], 0)
-        p_v = jnp.where(probe_u >= 0, v2, -1)
+        # VMEM-resident pass per TOUCHED pool tile — exact liveness, never
+        # blind, and never a full-pool scan
         nd, nw, nt, win_was_live = kops.append_edges(
             pool.dst, pool.weight, pool.ts, tgt_blk, slot % bs, op_ok,
-            sv, sw_, sts, p_start, p_sz, p_v)
+            sv, sw_, sts, p_start, p_sz, p_v, tiles=tiles_list,
+            n_touched=n_touched)
         pool = pool._replace(dst=nd, weight=nw, ts=nt)
         probe_blind = jnp.zeros((), bool)
     else:
         Wp = min(spec.probe_width, spec.dmax)
-        d_e, w_e, t_e, p_sz = _gather_vertex_entries(spec, pool, vt,
-                                                     probe_u, Wp)
+        d_e, w_e, t_e, _ = _gather_vertex_entries(spec, pool, vt,
+                                                  probe_u, Wp)
         t_match = jnp.where(d_e == v2[:, None], t_e, 0)  # clock starts at 1
         newest = jnp.argmax(t_match, axis=1)
         win_was_live = (jnp.max(t_match, axis=1) > 0) & \
@@ -727,7 +950,8 @@ def apply_edge_updates(spec: PoolSpec, pool: EdgePool, vt: VertexTable,
                          live_m=pool.live_m + delta,
                          live_dirty=jnp.maximum(
                              pool.live_dirty,
-                             ((dropped > 0) | probe_blind).astype(jnp.int32)))
+                             ((dropped > 0) | probe_blind).astype(jnp.int32)),
+                         tiles_scanned=pool.tiles_scanned + n_touched)
     return pool, vt, dropped
 
 

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 from dataclasses import dataclass
 from typing import NamedTuple, Optional, Tuple
 
@@ -177,8 +178,9 @@ _snapshot = jax.jit(step_snapshot, static_argnums=(0, 1, 2))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _defrag(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState):
-    pool, vt = ep.defrag(pspec, state.pool, state.vt)
+def _defrag(sspec: SortSpec, pspec: ep.PoolSpec, state: GraphState,
+            incoming=None):
+    pool, vt = ep.defrag(pspec, state.pool, state.vt, incoming)
     return GraphState(state.sort, vt, pool)
 
 
@@ -204,6 +206,7 @@ class RadixGraph:
     k_big: int = 16            # per-batch full-width (dmax) compaction budget
     append_impl: str = "auto"  # 'ref' scatter+window probe | 'pallas' fused
     compact_impl: str = "auto"
+    defrag_impl: str = "auto"  # 'stream' block-row rebuild | 'dense' lexsort
     capacity_factor: Optional[float] = None
     policy: str = "snaplog"    # 'snaplog' (paper) | 'grow' | 'sorted' baselines
     buf_blocks: int = 1
@@ -224,6 +227,7 @@ class RadixGraph:
                                      k_big=self.k_big,
                                      append_impl=self.append_impl,
                                      compact_impl=self.compact_impl,
+                                     defrag_impl=self.defrag_impl,
                                      policy=self.policy,
                                      buf_blocks=self.buf_blocks)
         self.state = GraphState(
@@ -242,6 +246,12 @@ class RadixGraph:
         self._epoch: int = 0          # bumped by every mutating op
         self.snapshot_hits: int = 0
         self.snapshot_misses: int = 0
+        # maintenance-spike accounting: wall-clock ms spent in ops that
+        # paid a global rebuild — explicit defrags and apply batches that
+        # triggered one (the tier-L fallback spikes) — and how many did
+        self.defrag_ms: float = 0.0
+        self.defrag_batches: int = 0
+        self._seen_defrags: int = 0
 
     # ---- batching helpers ----
     def _pad(self, arr, fill, dtype):
@@ -310,12 +320,24 @@ class RadixGraph:
                    pack_keys(pd[i:i + B], self.key_bits),
                    jnp.asarray(pw[i:i + B]), jnp.asarray(mask[i:i + B]))
 
+    def _note_spike(self, t0: float):
+        """Attribute the finished op's wall time to the spike accounting
+        when it paid a global rebuild (the pool's defrags counter
+        advanced past the watermark)."""
+        d = int(self.state.pool.defrags)
+        if d != self._seen_defrags:
+            self.defrag_ms += (time.perf_counter() - t0) * 1000.0
+            self.defrag_batches += 1
+            self._seen_defrags = d
+
     def _apply_edge_batches(self, src, dst, w):
         self._invalidate()
         for sk, dk, pw, mask in self._edge_batches(src, dst, w):
+            t0 = time.perf_counter()
             self.state, dropped = _update_edges(self.sort_spec, self.pool_spec,
                                                 self.state, sk, dk, pw, mask)
-            self.dropped_ops += int(dropped)
+            self.dropped_ops += int(dropped)   # also syncs the batch
+            self._note_spike(t0)
 
     def add_edges(self, src, dst, weight=None):
         w = np.ones(len(np.asarray(src)), np.float32) if weight is None \
@@ -426,9 +448,25 @@ class RadixGraph:
         """(label, version_ts) of every retained MVCC version."""
         return [(lbl, ts) for lbl, ts, _ in self._versions]
 
-    def defrag(self):
+    def defrag(self, pending_src=None):
+        """Explicit global rebuild. ``pending_src`` optionally names the
+        SOURCE vertex IDs of a batch about to be applied (e.g. one that
+        just reported drops): the rebuilt extents are pre-sized for those
+        pending ops — ``cap >= size + incoming`` per vertex — so freshly
+        rebuilt hub extents don't immediately re-overflow into another
+        rebuild when the batch is retried."""
         self._invalidate()
-        self.state = _defrag(self.sort_spec, self.pool_spec, self.state)
+        incoming = None
+        if pending_src is not None:
+            offs = self.lookup(np.asarray(pending_src, np.uint64))
+            incoming = jnp.zeros((self.n_max,), jnp.int32).at[
+                jnp.asarray(np.where(offs >= 0, offs, self.n_max))].add(
+                    1, mode="drop")
+        t0 = time.perf_counter()
+        self.state = _defrag(self.sort_spec, self.pool_spec, self.state,
+                             incoming)
+        jax.block_until_ready(self.state.pool.dst)
+        self._note_spike(t0)
 
     # ---- introspection ----
     @property
@@ -463,6 +501,14 @@ class RadixGraph:
         vertices per batch land here; Theorem 2 keeps it O(log) in the op
         count otherwise)."""
         return int(self.state.pool.defrags)
+
+    @property
+    def tiles_scanned(self) -> int:
+        """Cumulative pool tiles the bounded append visited (touched owner
+        extents + landed slots per batch) — certifies the prefetched scan
+        bound: it grows with the batches' footprints, never with
+        batches x pool size."""
+        return int(self.state.pool.tiles_scanned)
 
     def memory_bytes(self, materialized=True) -> int:
         """Paper-comparable memory: materialized SORT slots (4B), vertex rows

@@ -172,6 +172,12 @@ def _unpack_qbits(words: jnp.ndarray, Q: int) -> jnp.ndarray:
     return bits.reshape(R, QW * 32)[:, :Q] == 1
 
 
+def _popcount_rows(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-row set-bit count of a (R, W) uint32 word matrix."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                   axis=-1)
+
+
 def make_apply_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                      pack: bool = True, capacity_factor: float = 1.0,
                      route_budget: Optional[int] = None):
@@ -333,9 +339,20 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         roff = jnp.where(recv[:, 2] == 1,
                          sort_mod.lookup(sspec, g.sort, recv[:, 0:2]), -1)
         qidx = jnp.arange(Qtot, dtype=jnp.int32)
-        visited = jnp.zeros((Qtot, n_cap + 1), bool).at[
-            qidx, jnp.where(roff >= 0, roff, n_cap)].set(True)[:, :n_cap]
-        frontier = visited
+        # per-query visited/frontier carries are BITMAP-PACKED: uint32
+        # words over vertex offsets ((Qtot, n_cap/32) instead of the
+        # (Qtot, n_cap) bool slabs), 32x less carried state at pod-scale
+        # query batches; expansion transiently unpacks one frontier at a
+        # time and the final count is a popcount, so the packed loop is
+        # value-identical to the bool one (the parity tests against
+        # ``analytics.khop`` pin that down)
+        VW = (n_cap + 31) // 32
+        visited_w = jnp.zeros((Qtot, VW + 1), jnp.uint32).at[
+            qidx, jnp.where(roff >= 0, roff >> 5, VW)].set(
+                jnp.where(roff >= 0,
+                          jnp.uint32(1) << (roff & 31).astype(jnp.uint32),
+                          jnp.uint32(0)))[:, :VW]
+        frontier_w = visited_w
 
         payload_ids = jnp.stack([g.vt.ids[:, 0], g.vt.ids[:, 1]], axis=-1)
 
@@ -348,6 +365,7 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
             return hit[:n_cap].T    # (Qtot, n_cap), owner rows only
 
         for _hop in range(k):
+            frontier = _unpack_qbits(frontier_w, n_cap)   # transient
             exp = jax.vmap(lambda f: alg.bfs_expand(snap, f, edges))(frontier)
             qwords = _pack_qbits(exp.T)            # (n_cap, QW)
             mask_rows = rowlive & jnp.any(exp, axis=0)
@@ -365,11 +383,10 @@ def make_khop_counts(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                     lambda _: mark(*_route_compact(owner, mask_rows, payload,
                                                    n, frontier_budget, a2a)),
                     None)
-            frontier = hit & ~visited
-            visited = visited | frontier
+            frontier_w = _pack_qbits(hit) & ~visited_w
+            visited_w = visited_w | frontier_w
 
-        counts = jax.lax.psum(jnp.sum(visited.astype(jnp.int32), axis=1),
-                              axis)
+        counts = jax.lax.psum(_popcount_rows(visited_w), axis)
         counts = jnp.maximum(counts - 1, 0)  # drop the source; absent -> 0
         return counts[my * Ql + idx]         # psum-replicated: no return hop
 

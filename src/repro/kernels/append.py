@@ -1,7 +1,15 @@
 """Pallas TPU kernel: fused edge-pool append (ingest fast path).
 
-One grid step owns one tile of pool block-rows resident in VMEM and makes a
-single pass that fuses the three stages the XLA path runs separately:
+One grid step owns one TOUCHED tile of pool block-rows resident in VMEM —
+the tile list is a scalar-prefetch argument (``PrefetchScalarGridSpec``),
+computed per batch from the owner extents the batch's probes span plus the
+block rows its slots land in, so the kernel never scans tiles no op can
+reach. The grid length stays static (one step per pool tile) but steps past
+``n_touched`` revisit the last touched tile and skip all work: with the
+revisiting-window pipeline that is zero DMA and zero compute, so a batch's
+cost is O(touched_tiles x B) instead of the old O(pool_tiles x B) full-pool
+scan. Each visited step makes a single pass that fuses the three stages the
+XLA path runs separately:
 
 1. **probe** — for every distinct (owner, dst) pair of the batch, scan the
    owner's extent rows that fall inside this tile for the pair's newest
@@ -13,14 +21,17 @@ single pass that fuses the three stages the XLA path runs separately:
    (block, lane) when the slot falls inside the tile — the batched analogue
    of the paper's ``fetch_add`` log append, one pass for all three payloads
    instead of three XLA scatters;
-3. **liveness finalize** — after the last tile, emit ``was_live`` per pair
-   ((best_ts > 0) & (best_w != 0)), the exact pre-batch pair liveness that
-   drives the O(1) ``live_m`` counter with NO bounded-window blind spot.
+3. **liveness finalize** — after the last grid step, emit ``was_live`` per
+   pair ((best_ts > 0) & (best_w != 0)), the exact pre-batch pair liveness
+   that drives the O(1) ``live_m`` counter with NO bounded-window blind spot.
 
-TPU grids are sequential, so the scratch accumulators and the revisited
-``was_live`` output window are legal (same pattern as kernels/frontier.py).
-Validated in interpret mode (CPU container) against ``ref.append_ref``,
-which itself matches the ``_scatter_entries`` + dense-probe semantics.
+The pool payloads alias their outputs (``input_output_aliases``), so tiles
+the batch never touches keep their contents without ever moving through
+VMEM. TPU grids are sequential, so the scratch accumulators and the
+revisited ``was_live`` output window are legal (same pattern as
+kernels/frontier.py). Validated in interpret mode (CPU container) against
+``ref.append_ref``, which itself matches the ``_scatter_entries`` +
+dense-probe semantics under the probe/write commutation invariant above.
 """
 from __future__ import annotations
 
@@ -31,15 +42,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["append_pallas"]
+__all__ = ["append_pallas", "append_tile_rows"]
 
 
-def _kernel(dp, wp, tp, wblk, wlane, wval, wd, ww, wts, pstart, psize, pv,
-            od, ow, ot, owas, best_ts, best_w):
+def append_tile_rows(nb: int, tile: int = 128) -> int:
+    """The tile height (pool block rows per grid step) the append kernel
+    uses for an ``nb``-row pool — shared with the host-side touched-tile
+    computation so the prefetched tile indices mean the same thing."""
+    tile = min(tile, nb)
+    while nb % tile:
+        tile //= 2
+    return tile
+
+
+def _kernel(tiles, n_touched, dp, wp, tp, wblk, wlane, wval, wd, ww, wts,
+            pstart, psize, pv, od, ow, ot, owas, best_ts, best_w):
     T, BS = dp.shape
     B = wblk.shape[0]
     pid = pl.program_id(0)
-    t0 = pid * T
+    t0 = tiles[pid] * T
 
     @pl.when(pid == 0)
     def _():
@@ -47,59 +68,64 @@ def _kernel(dp, wp, tp, wblk, wlane, wval, wd, ww, wts, pstart, psize, pv,
         best_w[...] = jnp.zeros_like(best_w)
         owas[...] = jnp.zeros_like(owas)
 
-    # ---- probe pass (pre-append tile contents) ----
-    def probe(q, _):
-        sb = pstart[q]
-        sz = psize[q]
-        v = pv[q]
-        nblk = (sz + BS - 1) // BS
-        lo = jnp.maximum(sb, t0)
-        hi = jnp.minimum(sb + nblk, t0 + T)
-        ok_q = (sb >= 0) & (v >= 0)
+    # pid 0 always visits (an identity copy of its tile when the batch
+    # touches nothing): the output VMEM windows must be initialized before
+    # the pipeline flushes them over the aliased pool buffer
+    @pl.when((pid < n_touched[0]) | (pid == 0))
+    def _visit():
+        # ---- probe pass (pre-append tile contents) ----
+        def probe(q, _):
+            sb = pstart[q]
+            sz = psize[q]
+            v = pv[q]
+            nblk = (sz + BS - 1) // BS
+            lo = jnp.maximum(sb, t0)
+            hi = jnp.minimum(sb + nblk, t0 + T)
+            ok_q = (sb >= 0) & (v >= 0)
 
-        def row(r, _):
-            local = r - t0
+            def row(r, _):
+                local = r - t0
 
-            def lane(j, _):
-                pos = (r - sb) * BS + j
-                d = dp[local, j]
-                t = tp[local, j]
-                hit = ok_q & (pos < sz) & (d == v) & (t > best_ts[q])
+                def lane(j, _):
+                    pos = (r - sb) * BS + j
+                    d = dp[local, j]
+                    t = tp[local, j]
+                    hit = ok_q & (pos < sz) & (d == v) & (t > best_ts[q])
 
-                @pl.when(hit)
-                def _():
-                    best_ts[q] = t
-                    best_w[q] = wp[local, j]
+                    @pl.when(hit)
+                    def _():
+                        best_ts[q] = t
+                        best_w[q] = wp[local, j]
 
+                    return 0
+
+                jax.lax.fori_loop(0, BS, lane, 0)
                 return 0
 
-            jax.lax.fori_loop(0, BS, lane, 0)
+            jax.lax.fori_loop(lo, jnp.maximum(lo, hi), row, 0)
             return 0
 
-        jax.lax.fori_loop(lo, jnp.maximum(lo, hi), row, 0)
-        return 0
+        jax.lax.fori_loop(0, B, probe, 0)
 
-    jax.lax.fori_loop(0, B, probe, 0)
+        # ---- append pass: copy tile, land this tile's slots ----
+        od[...] = dp[...]
+        ow[...] = wp[...]
+        ot[...] = tp[...]
 
-    # ---- append pass: copy tile, land this tile's slots ----
-    od[...] = dp[...]
-    ow[...] = wp[...]
-    ot[...] = tp[...]
+        def wr(j, _):
+            blk = wblk[j]
 
-    def wr(j, _):
-        blk = wblk[j]
+            @pl.when((wval[j] != 0) & (blk >= t0) & (blk < t0 + T))
+            def _():
+                b = blk - t0
+                ln = wlane[j]
+                od[pl.ds(b, 1), pl.ds(ln, 1)] = wd[j][None, None]
+                ow[pl.ds(b, 1), pl.ds(ln, 1)] = ww[j][None, None]
+                ot[pl.ds(b, 1), pl.ds(ln, 1)] = wts[j][None, None]
 
-        @pl.when((wval[j] != 0) & (blk >= t0) & (blk < t0 + T))
-        def _():
-            b = blk - t0
-            ln = wlane[j]
-            od[pl.ds(b, 1), pl.ds(ln, 1)] = wd[j][None, None]
-            ow[pl.ds(b, 1), pl.ds(ln, 1)] = ww[j][None, None]
-            ot[pl.ds(b, 1), pl.ds(ln, 1)] = wts[j][None, None]
+            return 0
 
-        return 0
-
-    jax.lax.fori_loop(0, B, wr, 0)
+        jax.lax.fori_loop(0, B, wr, 0)
 
     @pl.when(pid == pl.num_programs(0) - 1)
     def _():
@@ -109,34 +135,47 @@ def _kernel(dp, wp, tp, wblk, wlane, wval, wd, ww, wts, pstart, psize, pv,
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def append_pallas(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
-                  pstart, psize, pv, tile: int = 128,
-                  interpret: bool | None = None):
-    """Drop-in for ``ref.append_ref`` (same outputs)."""
+                  pstart, psize, pv, tiles=None, n_touched=None,
+                  tile: int = 128, interpret: bool | None = None):
+    """Drop-in for ``ref.append_ref`` (same outputs). ``tiles`` is the
+    prefetched visit order — touched pool tiles first (ascending), then the
+    last touched tile repeated out to the grid length; ``n_touched`` is its
+    valid prefix. Omitting both falls back to visiting every tile."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     NB, BS = dst.shape
-    tile = min(tile, NB)
-    while NB % tile:
-        tile //= 2
+    tile = append_tile_rows(NB, tile)
     B = wblk.shape[0]
-    grid = (NB // tile,)
-    ptile = pl.BlockSpec((tile, BS), lambda i: (i, 0))
-    ops = pl.BlockSpec((B,), lambda i: (0,))
-    out = pl.pallas_call(
-        _kernel,
-        grid=grid,
+    n_tiles = NB // tile
+    if tiles is None:
+        tiles = jnp.arange(n_tiles, dtype=jnp.int32)
+        n_touched = jnp.asarray(n_tiles, jnp.int32)
+    ptile = pl.BlockSpec((tile, BS), lambda i, tl, nt: (tl[i], 0))
+    ops = pl.BlockSpec((B,), lambda i, tl, nt: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
         in_specs=[ptile, ptile, ptile] + [ops] * 9,
         out_specs=[ptile, ptile, ptile, ops],
+        scratch_shapes=[pltpu.VMEM((B,), jnp.int32),
+                        pltpu.VMEM((B,), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((NB, BS), dst.dtype),
             jax.ShapeDtypeStruct((NB, BS), w.dtype),
             jax.ShapeDtypeStruct((NB, BS), ts.dtype),
             jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((B,), jnp.int32),
-                        pltpu.VMEM((B,), jnp.float32)],
+        # pool payloads alias their outputs: untouched tiles keep their
+        # contents without a copy (operand indices count the two
+        # scalar-prefetch arguments)
+        input_output_aliases={2: 0, 3: 1, 4: 2},
         interpret=interpret,
-    )(dst, w, ts, wblk, wlane, wval.astype(jnp.int32), wd, ww, wts,
+    )(tiles, jnp.reshape(jnp.asarray(n_touched, jnp.int32), (1,)),
+      dst, w, ts, wblk, wlane, wval.astype(jnp.int32), wd, ww, wts,
       pstart, psize, pv)
     nd, nw, nt, was = out
     return nd, nw, nt, was == 1

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["compact_rows_pallas"]
+__all__ = ["compact_rows_pallas", "defrag_rows_pallas"]
 
 
 def _kernel(dst_ref, w_ref, ts_ref, size_ref, odst_ref, ow_ref, ots_ref,
@@ -123,3 +123,151 @@ def compact_rows_pallas(dst, w, ts, size, read_ts=None, *,
     )(dst, w, ts, size.reshape(K, 1).astype(jnp.int32))
     odst, ow, ots, ocnt = out
     return odst, ow, ots, ocnt[:, 0]
+
+
+# --------------------------------------------------------------------------
+# defrag row compactor: the streaming rebuild's per-vertex pass
+# --------------------------------------------------------------------------
+
+def _defrag_kernel(dst_ref, w_ref, ts_ref, size_ref, odst_ref, ow_ref,
+                   ots_ref, ocnt_ref, seen, seen2, live, prefix):
+    """Like the log compactor above, but survivors are emitted sorted by
+    destination ASCENDING (the defrag's CSR discipline) instead of
+    reverse-scan order. Three passes over the row's O(d) occupied entries
+    plus one O(n_cap/32) sweep over the bitmap words:
+
+    1. reverse scan marks the duplicate checker (``seen``) and, for each
+       destination's newest non-tombstone entry, the ``live`` bitmap;
+    2. a prefix-popcount over ``live`` words turns the bitmap into the
+       survivors' emission ranks, and a second reverse scan (deduped via
+       ``seen2``) places each winner at
+       ``prefix[word] + popcount(live_word & (bit - 1))`` — its
+       destination's rank among all live destinations;
+    3. the unmark pass (paper Alg. 2 lines 9-11) restores all three
+       bitmaps to zero so scratch persists cleanly across grid steps.
+    """
+    W = live.shape[0]
+    size = size_ref[0, 0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        seen[...] = jnp.zeros_like(seen)
+        seen2[...] = jnp.zeros_like(seen2)
+        live[...] = jnp.zeros_like(live)
+
+    odst_ref[...] = jnp.full_like(odst_ref, -1)
+    ow_ref[...] = jnp.zeros_like(ow_ref)
+    ots_ref[...] = jnp.zeros_like(ots_ref)
+
+    def scan(i, cnt):
+        j = size - 1 - i                      # reverse: most recent first
+        d = dst_ref[0, j]
+        word = jnp.right_shift(d, 5)
+        bit = jnp.uint32(1) << (d & 31).astype(jnp.uint32)
+        first = (d >= 0) & ((seen[word] & bit) == 0)
+        emit = first & (w_ref[0, j] != 0)
+
+        @pl.when(emit)
+        def _():
+            live[word] = live[word] | bit
+
+        @pl.when(d >= 0)
+        def _():
+            seen[word] = seen[word] | bit
+
+        return cnt + jnp.where(emit, 1, 0)
+
+    cnt = jax.lax.fori_loop(0, size, scan, jnp.int32(0))
+    ocnt_ref[0, 0] = cnt
+
+    def pre(wi, acc):
+        prefix[wi] = acc
+        return acc + jax.lax.population_count(live[wi]).astype(jnp.int32)
+
+    jax.lax.fori_loop(0, W, pre, jnp.int32(0))
+
+    def place(i, _):
+        j = size - 1 - i
+        d = dst_ref[0, j]
+        word = jnp.right_shift(d, 5)
+        bit = jnp.uint32(1) << (d & 31).astype(jnp.uint32)
+        winner = (d >= 0) & ((seen2[word] & bit) == 0) & \
+            ((live[word] & bit) != 0)
+
+        @pl.when(winner)
+        def _():
+            rank = prefix[word] + jax.lax.population_count(
+                live[word] & (bit - 1)).astype(jnp.int32)
+            odst_ref[0, pl.ds(rank, 1)] = d[None]
+            ow_ref[0, pl.ds(rank, 1)] = w_ref[0, j][None]
+            ots_ref[0, pl.ds(rank, 1)] = ts_ref[0, j][None]
+
+        @pl.when(d >= 0)
+        def _():
+            seen2[word] = seen2[word] | bit
+
+        return 0
+
+    jax.lax.fori_loop(0, size, place, 0)
+
+    def unmark(i, _):
+        d = dst_ref[0, i]
+
+        @pl.when(d >= 0)
+        def _():
+            word = jnp.right_shift(d, 5)
+            bit = jnp.uint32(1) << (d & 31).astype(jnp.uint32)
+            seen[word] = seen[word] & ~bit
+            seen2[word] = seen2[word] & ~bit
+            live[word] = live[word] & ~bit
+
+        return 0
+
+    jax.lax.fori_loop(0, size, unmark, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cap", "interpret"))
+def defrag_rows_pallas(dst, w, ts, size, *, n_cap: int | None = None,
+                       interpret: bool | None = None):
+    """Drop-in for ``ref.defrag_rows_ref`` (dedup mode only — the 'grow'
+    policy's keep-everything variant stays on the jnp oracle). Returns
+    (dst', w', ts', count, live) with live == count: dedup mode keeps
+    exactly the live pairs."""
+    K, D = dst.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if n_cap is None:
+        n_cap = 1 << 20
+    words = (n_cap + 31) // 32
+
+    grid = (K,)
+    row = lambda i: (i, 0)
+    out = pl.pallas_call(
+        _defrag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, 1), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, D), row),
+            pl.BlockSpec((1, 1), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, D), dst.dtype),
+            jax.ShapeDtypeStruct((K, D), w.dtype),
+            jax.ShapeDtypeStruct((K, D), ts.dtype),
+            jax.ShapeDtypeStruct((K, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((words,), jnp.uint32),
+                        pltpu.VMEM((words,), jnp.uint32),
+                        pltpu.VMEM((words,), jnp.uint32),
+                        pltpu.VMEM((words,), jnp.int32)],
+        interpret=interpret,
+    )(dst, w, ts, size.reshape(K, 1).astype(jnp.int32))
+    odst, ow, ots, ocnt = out
+    return odst, ow, ots, ocnt[:, 0], ocnt[:, 0]

@@ -27,15 +27,26 @@ def default_impl() -> str:
     return _DEFAULT_IMPL
 
 
+def append_tile_rows(nb: int, tile: int = 128) -> int:
+    """Pool block rows per append-kernel grid step (see kernels/append.py)
+    — exposed so callers computing the touched-tile prefetch list agree
+    with the kernel's tiling."""
+    from .append import append_tile_rows as _atr
+    return _atr(nb, tile)
+
+
 def append_edges(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
-                 pstart, psize, pv, impl: str = "auto"):
+                 pstart, psize, pv, tiles=None, n_touched=None,
+                 impl: str = "auto"):
     """Fused edge append: slot scatter of (dst, weight, ts) + pre-append
-    last-writer pair-liveness probe. See ref.append_ref."""
+    last-writer pair-liveness probe, bounded to the prefetched ``tiles``
+    list (touched pool tiles; the ref oracle is dense and ignores it).
+    See ref.append_ref."""
     impl = _DEFAULT_IMPL if impl == "auto" else impl
     if impl == "pallas":
         from .append import append_pallas
         return append_pallas(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
-                             pstart, psize, pv)
+                             pstart, psize, pv, tiles, n_touched)
     return _ref.append_ref(dst, w, ts, wblk, wlane, wval, wd, ww, wts,
                            pstart, psize, pv)
 
@@ -47,6 +58,22 @@ def compact_rows(dst, w, ts, size, read_ts=None, impl: str = "auto"):
         from .compact import compact_rows_pallas
         return compact_rows_pallas(dst, w, ts, size, read_ts=read_ts)
     return _ref.compact_rows_ref(dst, w, ts, size, read_ts=read_ts)
+
+
+def defrag_rows(dst, w, ts, size, keep_all: bool = False,
+                n_cap: int | None = None, impl: str = "auto"):
+    """Defrag row compactor: last-writer dedup + tombstone drop with
+    destination-ASCENDING emission (the streaming rebuild's per-vertex
+    pass). ``n_cap`` is the destination-offset universe the kernel's
+    bitmaps must cover — callers pass the vertex-table capacity.
+    ``keep_all`` (the 'grow' policy) always runs the jnp oracle — it
+    keeps every version, which the bitmap kernel cannot express.
+    See ref.defrag_rows_ref; returns (dst', w', ts', count, live)."""
+    impl = _DEFAULT_IMPL if impl == "auto" else impl
+    if impl == "pallas" and not keep_all:
+        from .compact import defrag_rows_pallas
+        return defrag_rows_pallas(dst, w, ts, size, n_cap=n_cap)
+    return _ref.defrag_rows_ref(dst, w, ts, size, keep_all=keep_all)
 
 
 def sort_lookup(pools, counts, keys, *, fanout_bits, bit_offsets,

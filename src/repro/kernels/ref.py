@@ -8,8 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["compact_rows_ref", "sort_lookup_ref", "frontier_ref",
-           "append_ref"]
+__all__ = ["compact_rows_ref", "defrag_rows_ref", "sort_lookup_ref",
+           "frontier_ref", "append_ref"]
 
 
 def append_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,
@@ -92,6 +92,55 @@ def compact_rows_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,
     tso = jnp.take_along_axis(jnp.where(keep, tss, 0), o3, -1)
     count = jnp.sum(keep.astype(jnp.int32), axis=-1)
     return dso, wso, tso, count
+
+
+def defrag_rows_ref(dst: jnp.ndarray, w: jnp.ndarray, ts: jnp.ndarray,
+                    size: jnp.ndarray, keep_all: bool = False):
+    """Defrag row compactor: the streaming rebuild's per-vertex pass.
+
+    Inputs are (K, D) edge-array gathers like ``compact_rows_ref`` —
+    destination offsets (-1 = empty), weights (0 = NULL tombstone),
+    timestamps — with ``size`` (K,) the occupied prefix. Rows must be
+    position-ordered with the pool's append invariant: per destination,
+    later positions carry later timestamps (holds for every extent the
+    fast path or a previous defrag built). Semantics match the global
+    rebuild's per-owner slice:
+
+    * last-writer-wins per destination (the highest-position entry — by
+      the invariant, also the newest timestamp), tombstones dropped;
+    * survivors emitted sorted by destination ASCENDING (the defrag's
+      CSR discipline, unlike ``compact_rows_ref``'s reverse-scan order);
+    * ``keep_all=True`` (the 'grow' policy) keeps every occupied entry —
+      duplicates and tombstones included — sorted by (dst, position).
+
+    Returns (dst', w', ts', count, live): ``count`` entries front-packed
+    per row (empty slots (-1, 0, 0)); ``live`` is the live-pair count
+    (last entry per destination carries a non-NULL weight) regardless of
+    ``keep_all`` — the defrag's exact ``live_m`` resync contribution.
+    """
+    K, D = dst.shape
+    pos = jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), (K, D))
+    valid = (pos < size[:, None]) & (dst >= 0)
+    BIGD = jnp.int32(2 ** 30)
+    dkey = jnp.where(valid, dst, BIGD)
+    order = jnp.argsort(dkey, axis=-1, stable=True)  # (dst asc, pos asc)
+    ds = jnp.take_along_axis(dkey, order, -1)
+    ws = jnp.take_along_axis(w, order, -1)
+    tss = jnp.take_along_axis(ts, order, -1)
+    nxt = jnp.concatenate([ds[:, 1:], jnp.full((K, 1), -2, ds.dtype)],
+                          axis=-1)
+    is_last = (ds != nxt) & (ds < BIGD)
+    live = jnp.sum((is_last & (ws != 0)).astype(jnp.int32), axis=-1)
+    keep = (ds < BIGD) if keep_all else (is_last & (ws != 0))
+    # survivors are already in emission order: front-pack with one scatter
+    kpos = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1
+    tgt = jnp.where(keep, kpos, D)
+    rows = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[:, None], (K, D))
+    dso = jnp.full((K, D), -1, dst.dtype).at[rows, tgt].set(ds, mode="drop")
+    wso = jnp.zeros((K, D), w.dtype).at[rows, tgt].set(ws, mode="drop")
+    tso = jnp.zeros((K, D), ts.dtype).at[rows, tgt].set(tss, mode="drop")
+    count = jnp.sum(keep.astype(jnp.int32), axis=-1)
+    return dso, wso, tso, count, live
 
 
 def sort_lookup_ref(pools, counts, keys: jnp.ndarray, *, fanout_bits,

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import edgepool as ep
 from repro.core.radixgraph import RadixGraph
 
 
@@ -278,6 +279,138 @@ def test_pallas_append_path_matches_ref_path(rng):
         a = g_ref.neighbors([vid])[0]
         b = g_pal.neighbors([vid])[0]
         assert set(a[0].tolist()) == set(b[0].tolist())
+
+
+# --------------------------------------------------------------------------
+# streaming defrag: bit-identical to the dense entry-scatter rebuild
+# --------------------------------------------------------------------------
+
+defrag_ops_strategy = st.lists(
+    st.tuples(st.integers(0, 25), st.integers(0, 25),
+              st.sampled_from([0.0, 1.0, 2.5])),
+    min_size=1, max_size=250)
+
+# one compile per pool config, shared across property examples
+import jax  # noqa: E402
+
+_stream_defrag = jax.jit(ep.defrag, static_argnums=0)
+_dense_defrag = jax.jit(ep._defrag_dense, static_argnums=0)
+
+
+def _assert_states_equal(a, b, ctx):
+    pa, va = a
+    pb, vb = b
+    for name in pa._fields:
+        assert np.array_equal(np.asarray(getattr(pa, name)),
+                              np.asarray(getattr(pb, name))), (ctx, name)
+    for name in va._fields:
+        assert np.array_equal(np.asarray(getattr(va, name)),
+                              np.asarray(getattr(vb, name))), (ctx, name)
+
+
+@settings(max_examples=8, deadline=None)
+@pytest.mark.parametrize("policy", ["snaplog", "grow", "sorted"])
+@given(ops=defrag_ops_strategy, dele=st.lists(st.integers(0, 25), max_size=3),
+       inc_v=st.lists(st.tuples(st.integers(0, 25), st.integers(1, 40)),
+                      max_size=4))
+def test_streaming_defrag_bit_identical_to_dense(policy, ops, dele, inc_v):
+    """Property: across policies, tombstones, deleted vertices, and
+    arbitrary pending-incoming hints, the streaming block-row rebuild
+    produces the SAME pool and vertex table — every array, including the
+    ``live_m`` resync — as the dense entry-scatter reference."""
+    g = mk(policy)
+    src = np.array([o[0] for o in ops], np.uint64)
+    dst = np.array([o[1] for o in ops], np.uint64)
+    w = np.array([o[2] for o in ops], np.float32)
+    g.apply_ops(src, dst, w)
+    if dele:
+        g.delete_vertices(np.unique(np.array(dele, np.uint64)))
+    incoming = np.zeros((g.n_max,), np.int32)
+    for vid, cnt in inc_v:
+        off = int(g.lookup(np.array([vid], np.uint64))[0])
+        if off >= 0:
+            incoming[off] += cnt
+    pool, vt = g.state.pool, g.state.vt
+    inc = jnp.asarray(incoming)
+    stream = _stream_defrag(g.pool_spec, pool, vt, inc)
+    dense = _dense_defrag(g.pool_spec, pool, vt, inc)
+    _assert_states_equal(stream, dense, policy)
+    # the rebuild is the live counter's resync point: exact, not dirty
+    assert int(stream[0].live_dirty) == 0
+    g.defrag()
+    assert g.num_edges == int(g.snapshot().m)
+
+
+def test_streaming_defrag_falls_back_past_dmax(rng):
+    """A vertex grown past dmax (post-jumbo) cannot ride the size
+    segments: the dispatcher must fall back to the dense rebuild and
+    still produce the identical state."""
+    g = mk(dmax=64, k_max=8, k_big=2, pool_blocks=8192)
+    # one vertex with > dmax distinct live edges: jumbo batches rebuild
+    # it via defrag, after which size (= live degree) exceeds dmax
+    dsts = np.arange(1, 101, dtype=np.uint64)
+    g.apply_ops(np.zeros(100, np.uint64), dsts, np.ones(100, np.float32))
+    off = int(g.lookup(np.array([0], np.uint64))[0])
+    assert int(g.state.vt.size[off]) > 64
+    pool, vt = g.state.pool, g.state.vt
+    inc = jnp.zeros((g.n_max,), jnp.int32)
+    _assert_states_equal(_stream_defrag(g.pool_spec, pool, vt, inc),
+                         _dense_defrag(g.pool_spec, pool, vt, inc),
+                         "past-dmax")
+    ids, _ = g.neighbors([0], width=128)[0]
+    assert set(ids.tolist()) == set(range(1, 101))
+
+
+def test_defrag_pending_hint_presizes_extents():
+    """An explicit defrag given the pending batch's sources must pre-size
+    the rebuilt extents so the batch then rides the fast path; without
+    the hint the same batch immediately re-overflows into a second
+    rebuild (the hub-stream failure mode the hint exists for)."""
+    def build():
+        # batch covers the whole follow-up stream so every hub overflows
+        # in ONE device batch (6 > k_max forces the rebuild fallback)
+        g = mk(k_max=4, k_big=2, batch=256)
+        hubs = np.arange(6, dtype=np.uint64)
+        src = np.repeat(hubs, 16)
+        dst = np.tile(np.arange(100, 116, dtype=np.uint64), 6)
+        g.apply_ops(src, dst, np.ones(96, np.float32))
+        return g, hubs
+    # the follow-up batch: 40 fresh edges per hub — more than the 2d
+    # discipline reserves, and 6 overflowing hubs exceed k_max/k_big
+    g, hubs = build()
+    src2 = np.repeat(hubs, 40)
+    dst2 = np.tile(np.arange(200, 240, dtype=np.uint64), 6)
+    w2 = np.ones(240, np.float32)
+
+    g.defrag(pending_src=src2)          # hint: pre-size for the batch
+    d0 = g.num_defrags
+    g.apply_ops(src2, dst2, w2)
+    assert g.num_defrags == d0          # no re-overflow rebuild
+    assert g.dropped_ops == 0 and not g.overflowed
+
+    g2, _ = build()
+    g2.defrag()                         # control: no hint
+    d0 = g2.num_defrags
+    g2.apply_ops(src2, dst2, w2)
+    assert g2.num_defrags == d0 + 1     # immediate re-overflow rebuild
+    assert g.num_edges == g2.num_edges
+
+
+def test_append_tiles_scanned_bounded_by_touched_extents():
+    """The bounded append's tile counter must track the batches'
+    footprints: a tiny graph in a huge pool (32 tiles) scans a handful of
+    tiles per batch, never batches x pool tiles."""
+    g = mk()                    # pool_blocks=4096, bs=8 -> 32 append tiles
+    rng = np.random.default_rng(0)
+    n_batches = 6
+    for i in range(n_batches):
+        src = rng.integers(0, 16, 50).astype(np.uint64)
+        dst = rng.integers(0, 16, 50).astype(np.uint64)
+        g.apply_ops(src, dst, np.ones(50, np.float32))
+    assert g.tiles_scanned >= n_batches          # every batch lands slots
+    assert g.tiles_scanned <= 4 * n_batches      # touched-extent bound
+    # dense scanning would have cost batches x n_tiles
+    assert g.tiles_scanned < n_batches * 32
 
 
 def test_mixed_stream_undirected_order_across_batches(rng):

@@ -9,8 +9,8 @@ from repro.core.keys import pack_keys
 from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
 from repro.kernels import ref as R
-from repro.kernels.append import append_pallas
-from repro.kernels.compact import compact_rows_pallas
+from repro.kernels.append import append_pallas, append_tile_rows
+from repro.kernels.compact import compact_rows_pallas, defrag_rows_pallas
 from repro.kernels.frontier import frontier_pallas
 from repro.kernels.sort_lookup import sort_lookup_pallas
 
@@ -71,6 +71,37 @@ def test_sort_lookup_kernel(n, tile, rng):
     assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("K,D", [(1, 8), (4, 16), (3, 64), (2, 128)])
+def test_defrag_rows_kernel_sweep(K, D, rng):
+    """The defrag row compactor (bitmap + prefix-popcount ranks) must match
+    its oracle bit-exactly: dedup by highest occupied position, tombstones
+    dropped, survivors emitted by ascending destination."""
+    n_cap = 64
+    dst = rng.integers(-1, n_cap, (K, D)).astype(np.int32)
+    w = np.round(rng.uniform(0, 2, (K, D))).astype(np.float32)
+    ts = rng.permutation(K * D).reshape(K, D).astype(np.int32)
+    size = rng.integers(0, D + 1, (K,)).astype(np.int32)
+    a = R.defrag_rows_ref(*map(jnp.asarray, (dst, w, ts, size)))
+    b = defrag_rows_pallas(*map(jnp.asarray, (dst, w, ts, size)),
+                           n_cap=n_cap)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_defrag_rows_keep_all_orders_by_dst_then_pos(rng):
+    """'grow' mode keeps every occupied entry (dups + tombstones), grouped
+    by destination in position order, and still reports live pairs."""
+    dst = np.array([[3, 1, 3, 2, 1, -1]], np.int32)
+    w = np.array([[1.0, 0.0, 2.0, 1.0, 5.0, 9.0]], np.float32)
+    ts = np.array([[1, 2, 3, 4, 5, 6]], np.int32)
+    size = np.array([5], np.int32)
+    d, ww, tt, cnt, live = R.defrag_rows_ref(
+        *map(jnp.asarray, (dst, w, ts, size)), keep_all=True)
+    assert cnt[0] == 5 and live[0] == 3      # pairs 1, 2, 3 all end live
+    assert np.asarray(d)[0, :5].tolist() == [1, 1, 2, 3, 3]
+    assert np.asarray(ww)[0, :5].tolist() == [0.0, 5.0, 1.0, 1.0, 2.0]
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 2 ** 31), st.integers(2, 16))
 def test_append_kernel(seed, tile):
@@ -94,6 +125,61 @@ def test_append_kernel(seed, tile):
                                    wts, pstart, psize, pv)))
     a = R.append_ref(*args)
     b = append_pallas(*args, tile=tile)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _touched_tiles(NB, BS, T, wblk, wval, pstart, psize):
+    """Host replica of the edgepool touched-tile computation: probe
+    extents marked as [first, last] tile ranges, landed slots as points."""
+    n_tiles = NB // T
+    touched = np.zeros(n_tiles, bool)
+    for s, z in zip(pstart, psize):
+        rows = -(-z // BS)
+        if s >= 0 and rows > 0:
+            touched[s // T:(s + rows - 1) // T + 1] = True
+    for b, v in zip(wblk, wval):
+        if v:
+            touched[b // T] = True
+    order = np.nonzero(touched)[0]
+    n = len(order)
+    tiles = np.full(n_tiles, order[-1] if n else 0, np.int32)
+    tiles[:n] = order
+    return tiles, n
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_append_kernel_bounded_scan(seed):
+    """The prefetched tile list must (a) reproduce the dense-probe oracle
+    exactly — every tile a probe extent or landed slot can reach is
+    visited — and (b) stay within the touched-extent bound: ops packed
+    into a corner of the pool never visit the rest of it."""
+    rng = np.random.default_rng(seed)
+    NB, BS, B, T = 64, 8, 16, 8
+    dst = rng.integers(-1, 16, (NB, BS)).astype(np.int32)
+    w = np.round(rng.uniform(0, 2, (NB, BS))).astype(np.float32)
+    ts = (rng.permutation(NB * BS).reshape(NB, BS) + 1).astype(np.int32)
+    # ops confined to the first quarter of the pool: extents start in
+    # rows [0, 8), slots land in rows [8, 16) — at/after the extent end,
+    # the probe/write commutation invariant the production path upholds
+    pstart = rng.integers(-1, 8, B).astype(np.int32)
+    psize = rng.integers(0, BS + 1, B).astype(np.int32)
+    pv = rng.integers(-1, 16, B).astype(np.int32)
+    wblk = rng.integers(8, 16, B).astype(np.int32)
+    wlane = rng.integers(0, BS, B).astype(np.int32)
+    wval = rng.random(B) < 0.7
+    wd = rng.integers(0, 16, B).astype(np.int32)
+    ww = np.round(rng.uniform(0, 2, B)).astype(np.float32)
+    wts = (rng.permutation(B) + 1000).astype(np.int32)
+
+    tiles, n_touched = _touched_tiles(NB, BS, T, wblk, wval, pstart, psize)
+    assert n_touched <= 2 * (16 // T)   # the touched-extent bound: 2 tiles
+    args = tuple(map(jnp.asarray, (dst, w, ts, wblk, wlane, wval, wd, ww,
+                                   wts, pstart, psize, pv)))
+    a = R.append_ref(*args)
+    b = append_pallas(*args, jnp.asarray(tiles),
+                      jnp.asarray(n_touched, jnp.int32), tile=T)
     for x, y in zip(a, b):
         assert np.array_equal(np.asarray(x), np.asarray(y))
 
