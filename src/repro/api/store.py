@@ -103,7 +103,9 @@ class LocalStore:
         self.m_cap = m_cap or self.graph.pool_spec.capacity_entries
         self._seq = 0
         self.stats = dict(ops_applied=0, ops_dropped=0, defrags=0,
-                          defrag_ms=0.0, tiles_scanned=0)
+                          defrag_ms=0.0, tiles_scanned=0,
+                          flushes=0, super_batches=0,
+                          host_stage_ms=0.0, device_sync_ms=0.0)
 
     # ---- mutation ----
     def apply(self, batch: OpBatch) -> ApplyResult:
@@ -129,10 +131,16 @@ class LocalStore:
         self.stats["defrags"] = g.num_defrags
         self.stats["defrag_ms"] = round(g.defrag_ms, 3)
         self.stats["tiles_scanned"] = g.tiles_scanned
+        self.stats["flushes"] = g.pipe_flushes
+        self.stats["super_batches"] = g.pipe_super_batches
+        self.stats["host_stage_ms"] = round(g.pipe_stage_ms, 3)
+        self.stats["device_sync_ms"] = round(g.pipe_sync_ms, 3)
         return res
 
     # ---- epochs ----
     def capture(self) -> Epoch:
+        # exempt the captured state from steady-state buffer donation
+        self.graph.pin_live_state()
         return Epoch(self.graph.state, self._seq)
 
     def clock(self, at: Optional[Epoch] = None) -> int:
@@ -278,6 +286,9 @@ class ShardedStore:
                  sync_incremental: bool = True,
                  sync_budget: Optional[int] = None,
                  sort_capacity_factor: Optional[float] = None,
+                 pipeline_depth: int = 8,
+                 donate_steady_state: bool = True,
+                 fuse_scan: bool = False,
                  devices=None):
         from jax.sharding import AxisType
         assert batch % n_shards == 0 and query_batch % n_shards == 0, \
@@ -294,6 +305,9 @@ class ShardedStore:
         self.route_budget = route_budget
         self.frontier_budget = frontier_budget
         self.sync_incremental = sync_incremental
+        self.pipeline_depth = pipeline_depth
+        self.donate_steady_state = donate_steady_state
+        self.fuse_scan = fuse_scan
         self.mesh = jax.make_mesh(
             (n_shards,), (axis,),
             devices=(devices if devices is not None
@@ -319,9 +333,12 @@ class ShardedStore:
         self._host_cache = None        # (state-ref, host id/row view)
         self._full_sync_cache = None   # (state-ref, synced-state) pair
         self._seen_defrags = 0
+        self._pinned = None            # donation-exempt live state pytree
         self.stats = dict(ops_applied=0, ops_dropped=0,
                           sync_runs=0, sync_skips=0, defrags=0,
-                          defrag_ms=0.0, tiles_scanned=0)
+                          defrag_ms=0.0, tiles_scanned=0,
+                          flushes=0, super_batches=0,
+                          host_stage_ms=0.0, device_sync_ms=0.0)
 
     @property
     def state(self):
@@ -330,6 +347,10 @@ class ShardedStore:
         if self._live_state is None:
             self._live_state = ge.make_sharded_state(
                 self.sspec, self.pspec, self.n_shards, self.n_per_shard)
+            # the broadcast-built fresh state can share one device buffer
+            # across zero-filled leaves — XLA refuses to donate an aliased
+            # buffer twice, so the first dispatch must not donate
+            self._pinned = self._live_state
         return self._live_state
 
     @state.setter
@@ -343,18 +364,30 @@ class ShardedStore:
             f = self._fns[key] = jax.jit(build())
         return f
 
-    def apply_program(self, donate: bool = False) -> Callable:
+    def apply_program(self, donate: bool = False,
+                      depth: Optional[int] = None) -> Callable:
+        """The jitted routed-apply program. ``depth=None`` is the per-batch
+        (B, ...) entry; any int selects the K-batch pipelined entry taking
+        stacked (K, B, ...) super-batches — ONE cached callable serves every
+        K (jit retraces per distinct leading dim). ``donate=True`` donates
+        the state pytree (steady-state buffers reuse the old pool image)."""
         def build():
-            return ge.make_apply_edges(
+            if depth is None:
+                return ge.make_apply_edges(
+                    self.sspec, self.pspec, self.mesh, self.axis,
+                    pack=self.pack, capacity_factor=self.capacity_factor,
+                    route_budget=self.route_budget)
+            return ge.make_apply_edges_pipelined(
                 self.sspec, self.pspec, self.mesh, self.axis,
                 pack=self.pack, capacity_factor=self.capacity_factor,
                 route_budget=self.route_budget)
-        if donate:      # AOT-lowering variant (dryrun memory analysis)
-            key = ("apply", "donate")
-            if key not in self._fns:
-                self._fns[key] = jax.jit(build(), donate_argnums=(0,))
-            return self._fns[key]
-        return self._fn(("apply",), build)
+        key = ("apply" if depth is None else "applyK",
+               "donate" if donate else "plain")
+        if key not in self._fns:
+            f = build()
+            self._fns[key] = jax.jit(f, donate_argnums=(0,)) if donate \
+                else jax.jit(f)
+        return self._fns[key]
 
     def analytics_program(self, name: str, **static) -> Callable:
         """The jitted mesh program of a registered algorithm (also the
@@ -393,28 +426,73 @@ class ShardedStore:
             src, dst, w = interleave_undirected(src, dst, w)
         sk, dk = self._keys(src), self._keys(dst)
         B = self.batch
-        fn = self.apply_program()
-        dropped = 0
-        for lo in range(0, len(src), B):
-            n = min(B, len(src) - lo)
-            psk = np.zeros((B, 2), np.uint32)
-            pdk = np.zeros((B, 2), np.uint32)
-            pw = np.zeros((B,), np.float32)
-            mask = np.zeros((B,), bool)
-            psk[:n], pdk[:n], pw[:n] = sk[lo:lo + n], dk[lo:lo + n], \
-                w[lo:lo + n]
-            mask[:n] = True
-            t0 = time.perf_counter()
-            self.state, d = fn(self.state, jnp.asarray(psk),
-                               jnp.asarray(pdk), jnp.asarray(pw),
-                               jnp.asarray(mask))
-            dropped += int(np.asarray(d).sum())   # also syncs the batch
-            dsum = int(np.asarray(self.state.pool.defrags).sum())
-            if dsum != self._seen_defrags:        # some shard rebuilt
-                self.stats["defrag_ms"] = round(
-                    self.stats["defrag_ms"] +
-                    (time.perf_counter() - t0) * 1000.0, 3)
-                self._seen_defrags = dsum
+        N = len(src)
+        NB = (N + B - 1) // B
+        K = max(1, int(self.pipeline_depth))
+        t0 = time.perf_counter()
+        # stage the whole flush once, then dispatch (k, B, ...) super-batches
+        # ASYNCHRONOUSLY — no np.asarray() per batch; the ragged tail ships
+        # at its true depth k' < K (whole-batch padding would advance the
+        # pool clock and break parity with the sequential path)
+        psk = np.zeros((NB * B, 2), np.uint32)
+        pdk = np.zeros((NB * B, 2), np.uint32)
+        pw = np.zeros((NB * B,), np.float32)
+        mask = np.zeros((NB * B,), bool)
+        psk[:N], pdk[:N], pw[:N], mask[:N] = sk, dk, w, True
+        drops = []
+        i = 0
+        while i < NB:
+            k = min(K, NB - i)
+            lo, hi = i * B, (i + k) * B
+            if k > 1 and self.fuse_scan:
+                # opt-in fused entry: k batches as ONE lax.scan program.
+                # (Slower than k flat donated dispatches on XLA CPU — the
+                # loop-carried pool scatters lose the in-place-update
+                # optimization — but it is the single-program artifact the
+                # dryrun lowers and the parity suite certifies.)
+                donate = self.donate_steady_state and \
+                    (self.state is not self._pinned)
+                fn = self.apply_program(donate=donate, depth=k)
+                self.state, d = fn(
+                    self.state,
+                    jnp.asarray(psk[lo:hi].reshape(k, B, 2)),
+                    jnp.asarray(pdk[lo:hi].reshape(k, B, 2)),
+                    jnp.asarray(pw[lo:hi].reshape(k, B)),
+                    jnp.asarray(mask[lo:hi].reshape(k, B)))
+                drops.append(d)             # device array — no sync here
+            else:
+                # default steady state: k flat donated dispatches with no
+                # host sync between them (donation re-checked per dispatch;
+                # after the first, the state is a fresh jit output)
+                for a in range(lo, hi, B):
+                    donate = self.donate_steady_state and \
+                        (self.state is not self._pinned)
+                    fn = self.apply_program(donate=donate)
+                    self.state, d = fn(
+                        self.state, jnp.asarray(psk[a:a + B]),
+                        jnp.asarray(pdk[a:a + B]), jnp.asarray(pw[a:a + B]),
+                        jnp.asarray(mask[a:a + B]))
+                    drops.append(d)
+            self.stats["super_batches"] += 1
+            i += k
+        self.stats["host_stage_ms"] = round(
+            self.stats["host_stage_ms"] +
+            (time.perf_counter() - t0) * 1000.0, 3)
+        # ONE host sync per flush: the drop fetch forces the dispatched
+        # chain; the defrag counter delta then attributes any rebuild
+        # spike to this flush window instead of serializing every batch
+        t1 = time.perf_counter()
+        dropped = int(sum(int(np.asarray(d).sum()) for d in drops))
+        dsum = int(np.asarray(self.state.pool.defrags).sum())
+        if dsum != self._seen_defrags:            # some shard rebuilt
+            self.stats["defrag_ms"] = round(
+                self.stats["defrag_ms"] +
+                (time.perf_counter() - t0) * 1000.0, 3)
+            self._seen_defrags = dsum
+        self.stats["device_sync_ms"] = round(
+            self.stats["device_sync_ms"] +
+            (time.perf_counter() - t1) * 1000.0, 3)
+        self.stats["flushes"] += 1
         self._seq += 1
         self._snap_cache = self._host_cache = None
         # raw submitted ops (undirected doubling is an internal detail),
@@ -441,11 +519,17 @@ class ShardedStore:
             self.sspec, self.pspec, self.mesh, self.axis,
             budget=self.sync_budget, incremental=True))
         self.state = fn(self.state, jnp.asarray(self._synced_rows))
-        self._synced_rows = np.asarray(self.state.vt.num_rows)
+        # np.array COPIES: np.asarray on CPU is a zero-copy view of the
+        # live buffer, which the next (donating) apply would invalidate
+        self._synced_rows = np.array(self.state.vt.num_rows)
         self.stats["sync_runs"] += 1
 
     # ---- epochs ----
     def capture(self) -> Epoch:
+        # the handle retains the live arrays: exempt this state from
+        # steady-state buffer donation (the next apply's first dispatch
+        # runs the non-donating program, later ones donate fresh outputs)
+        self._pinned = self.state
         return Epoch(self.state, self._seq)
 
     def clock(self, at: Optional[Epoch] = None) -> int:

@@ -50,7 +50,8 @@ def _compile_stats(compiled, dt: float) -> dict:
         "flops": float(cost.get("flops", 0)),
         "bytes_accessed": float(cost.get("bytes accessed", 0)),
         "memory": {k: int(getattr(mem, k)) for k in
-                   ("argument_size_in_bytes", "temp_size_in_bytes")
+                   ("argument_size_in_bytes", "temp_size_in_bytes",
+                    "output_size_in_bytes", "alias_size_in_bytes")
                    if hasattr(mem, k)},
         "collective_bytes": cb, "collective_counts": cc,
         "collective_branch_rule": BRANCH_RULE,
@@ -71,27 +72,41 @@ def _make_store(args, n):
 
 def _mode_ingest(args, store, n):
     B = store.batch
-    fn = store.apply_program(donate=True)
+    K = args.pipeline_depth
     t0 = time.time()
-    compiled = fn.lower(
-        store.state_struct(),
-        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
-        jax.ShapeDtypeStruct((B, 2), jnp.uint32),
-        jax.ShapeDtypeStruct((B,), jnp.float32),
-        jax.ShapeDtypeStruct((B,), bool)).compile()
+    if K > 1:
+        # the K-batch pipelined entry: one donated scan program over a
+        # stacked (K, B, ...) super-batch — ``alias_size_in_bytes`` in the
+        # memory analysis records the state bytes reusing the input image
+        fn = store.apply_program(donate=True, depth=K)
+        compiled = fn.lower(
+            store.state_struct(),
+            jax.ShapeDtypeStruct((K, B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((K, B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((K, B), jnp.float32),
+            jax.ShapeDtypeStruct((K, B), bool)).compile()
+    else:
+        fn = store.apply_program(donate=True)
+        compiled = fn.lower(
+            store.state_struct(),
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), bool)).compile()
     tag = ("" if not args.no_pack else "+nopack") + \
-        ("" if args.route_budget is None else f"+route{args.route_budget}")
+        ("" if args.route_budget is None else f"+route{args.route_budget}") + \
+        ("" if K == 1 else f"+pipe{K}")
     rec = {
-        "arch": "radixgraph-ingest", "shape": f"ops{B}",
+        "arch": "radixgraph-ingest", "shape": f"ops{K * B}",
         "mesh": f"graph{n}" + tag,
-        "chips": n, "batch_ops": B,
+        "chips": n, "batch_ops": K * B, "pipeline_depth": K,
         **_compile_stats(compiled, time.time() - t0),
     }
     name = f"radixgraph-ingest__{n}shards" + tag.replace("+", "__") + ".json"
     _record(name, rec)
     per_dev = sum(rec["collective_bytes"].values())
-    print(f"[OK] graph-ingest x {n} shards (pack={not args.no_pack}): "
-          f"compile {rec['compile_s']:.0f}s, {B} ops/step, coll "
+    print(f"[OK] graph-ingest x {n} shards (pack={not args.no_pack}, "
+          f"K={K}): compile {rec['compile_s']:.0f}s, {K * B} ops/step, coll "
           f"{per_dev/2**20:.2f} MiB/dev "
           f"({sum(rec['collective_counts'].values()):.0f} launches), "
           f"args+temp {sum(rec['memory'].values())/2**30:.2f} GiB")
@@ -182,6 +197,9 @@ def main(argv=None):
     ap.add_argument("--no-pack", action="store_true")
     ap.add_argument("--route-budget", type=int, default=None,
                     help="compacted op-router budget (ingest mode)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="ingest mode: K batches fused per device program "
+                         "(the lax.scan super-batch entry)")
     ap.add_argument("--frontier-budget", type=int, default=None,
                     help="compacted frontier/inflow exchange budget "
                          "(analytics mode)")

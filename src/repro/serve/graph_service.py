@@ -70,12 +70,18 @@ class GraphQueryService:
     def __init__(self, store: GraphStore, *, write_batch: Optional[int] = None,
                  query_batch: Optional[int] = None, seal_every: int = 1,
                  max_pending: int = 65536, bfs_iters: int = 32,
-                 pr_iters: int = 20, damping: float = 0.85):
+                 pr_iters: int = 20, damping: float = 0.85,
+                 pipeline_depth: int = 1):
         self.store = store
         self.n_shards = store.n_shards
         self.write_batch = write_batch or getattr(
             store, "batch", None) or store.graph.batch
         self.query_batch = query_batch or getattr(store, "query_batch", 256)
+        # micro-batches drained per write phase: one store.apply flush ships
+        # up to pipeline_depth device batches back-to-back (donated
+        # steady-state dispatches, a single host sync per flush) — depth 1
+        # preserves the classic one-batch-per-step scheduling
+        self.pipeline_depth = max(1, pipeline_depth)
         self.seal_every = seal_every
         self.max_pending = max_pending
         self.bfs_iters = bfs_iters
@@ -94,14 +100,20 @@ class GraphQueryService:
         self._next_ticket = 0
         self.results: Dict[int, object] = {}
         self._stats = dict(steps=0, queries_answered=0, epochs_sealed=0,
-                           sync_reused=0)
+                           sync_reused=0, write_flushes=0,
+                           inflight_write_batches=0)
 
     @property
     def stats(self) -> dict:
         """Service counters merged with the store's — op accounting
         (ops_applied/ops_dropped, sync_runs/skips) lives on the store and
-        is never shadowed here (keys are disjoint by construction)."""
-        return {**getattr(self.store, "stats", {}), **self._stats}
+        is never shadowed here (keys are disjoint by construction).
+        Admission observability for the serving tier: ``queued_write_ops``
+        (ops admitted but not yet shipped) vs ``inflight_write_batches``
+        (device batches the LAST flush dispatched), plus the store's own
+        ``flushes``/``super_batches`` pipeline counters."""
+        return {**getattr(self.store, "stats", {}), **self._stats,
+                "queued_write_ops": self.pending_writes}
 
     # ---- admission ----
     def submit_update(self, src, dst, weight=None) -> bool:
@@ -167,7 +179,7 @@ class GraphQueryService:
     def _write_phase(self):
         if not self._writes:
             return
-        B = self.write_batch
+        B = self.write_batch * self.pipeline_depth
         parts, need = [], B
         while self._writes and need > 0:
             s, d, w = self._writes[0]
@@ -184,6 +196,9 @@ class GraphQueryService:
             np.concatenate([p[0] for p in parts]),
             np.concatenate([p[1] for p in parts]),
             np.concatenate([p[2] for p in parts])))
+        self._stats["write_flushes"] += 1
+        self._stats["inflight_write_batches"] = \
+            (take + self.write_batch - 1) // self.write_batch
 
     def _answer_analytics(self, q: Query):
         op = self._build_op(q)

@@ -156,6 +156,105 @@ def test_service_runs_on_local_backend():
     assert svc.claim(tw) == ref.analytics(AnalyticsOp("wcc"))
 
 
+# ---- pipelined K-batch apply (PR 6) ----
+
+def test_pipelined_apply_bitexact_with_defrag_and_ragged_tail():
+    """A K-deep pipelined apply (scanned super-batches, donated steady-state
+    buffers) is BIT-EXACT vs the K=1 sequential reference — including an
+    overflow defrag firing mid-super-batch (tiny probe window + k_big=1 on
+    a hub stream) and a ragged final super-batch K' < K (5 batches at
+    K=2 -> groups [2, 2, 1])."""
+    import jax
+
+    def mk(depth, donate):
+        # fuse_scan exercises the single-program lax.scan entry (the
+        # default steady state dispatches flat donated programs instead)
+        return make_store("local", n_max=2048, key_bits=32, expected_n=256,
+                          batch=512, pool_blocks=8192, block_size=8,
+                          dmax=512, k_max=64, probe_width=8, k_big=1,
+                          pipeline_depth=depth, donate_apply=donate,
+                          fuse_scan=depth > 1)
+
+    rng = np.random.default_rng(7)
+    ids = rng.choice(2 ** 32, 96, replace=False).astype(np.uint64)
+    hubs = ids[:6]                       # 6 hubs > k_big=1: defrag fallback
+    n_ops = 512 * 5                      # NB=5 batches
+    src = hubs[np.arange(n_ops) % len(hubs)]
+    dst = ids[rng.integers(0, len(ids), n_ops)]
+    w = rng.uniform(0.5, 2, n_ops).astype(np.float32)
+    w[rng.random(n_ops) < 0.1] = 0.0
+
+    ref = mk(1, False)
+    pipe = mk(2, True)
+    r1 = ref.apply(OpBatch.edges(src, dst, w))
+    r2 = pipe.apply(OpBatch.edges(src, dst, w))
+    assert r1.dropped == r2.dropped
+    for a, b in zip(jax.tree.leaves(ref.graph.state),
+                    jax.tree.leaves(pipe.graph.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the stream must actually have exercised the mid-scan defrag fallback
+    assert pipe.graph.num_defrags >= 1
+    assert pipe.graph.num_defrags == ref.graph.num_defrags
+    assert ref.read(ReadOp("num_edges")) == pipe.read(ReadOp("num_edges"))
+    # flush accounting: one apply = one flush; 5 batches at K=2 ship as
+    # [2, 2, 1] — the ragged tail is its own dispatch, never clock-padded
+    assert pipe.stats["flushes"] == 1 and pipe.stats["super_batches"] == 3
+    assert ref.stats["super_batches"] == 5
+
+
+def test_pipelined_apply_donation_epoch_safety():
+    """Captured epochs stay readable across donating steady-state applies:
+    capture() pins the live state (first dispatch after a pin runs the
+    non-donating program), so MVCC handles never observe freed buffers."""
+    ids, src, dst, w = _stream(seed=13)
+    store = make_store("local", n_max=2048, key_bits=32, expected_n=256,
+                       batch=512, pool_blocks=8192, block_size=8, dmax=512,
+                       k_max=64, pipeline_depth=4)
+    store.apply(OpBatch.edges(src[:300], dst[:300], w[:300]))
+    h = store.capture()
+    ne0 = store.read(ReadOp("num_edges"), at=h)
+    deg0 = store.read(ReadOp("degree", ids=ids[:8]), at=h)
+    for _ in range(3):                  # steady state: donating dispatches
+        store.apply(OpBatch.edges(src[300:], dst[300:], w[300:]))
+    assert store.read(ReadOp("num_edges"), at=h) == ne0
+    assert np.array_equal(store.read(ReadOp("degree", ids=ids[:8]), at=h),
+                          deg0)
+
+
+def test_apply_donation_memory_analysis():
+    """HLO memory analysis of the K-batch apply program: the donated
+    variant aliases the state bytes into the output (no second pool image),
+    so its peak live bytes drop vs the non-donating program."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import radixgraph as rgm
+
+    g = _local().graph
+    st = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                      g.state)
+    B, K = g.batch, 4
+    args = (jax.ShapeDtypeStruct((K, B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((K, B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((K, B), jnp.float32),
+            jax.ShapeDtypeStruct((K, B), bool))
+    plain = rgm._update_edges_pipe.lower(
+        g.sort_spec, g.pool_spec, st, *args).compile().memory_analysis()
+    don = rgm._update_edges_pipe_donate.lower(
+        g.sort_spec, g.pool_spec, st, *args).compile().memory_analysis()
+
+    def peak(m):
+        return (m.argument_size_in_bytes + m.output_size_in_bytes +
+                m.temp_size_in_bytes - m.alias_size_in_bytes)
+
+    state_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                      for x in jax.tree.leaves(st))
+    assert plain.alias_size_in_bytes == 0
+    # the donated program reuses (nearly) the whole state image in place —
+    # at least the pool's dst/weight/ts arrays must alias
+    assert don.alias_size_in_bytes >= state_bytes // 2
+    assert peak(don) <= peak(plain) - state_bytes // 2
+
+
 # ---- cross-backend parity (subprocess: needs 2 devices) ----
 
 @pytest.mark.slow

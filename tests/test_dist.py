@@ -308,3 +308,72 @@ def test_distributed_analytics_subprocess():
                          cwd=str(__import__("pathlib").Path(
                              __file__).resolve().parents[1]), timeout=600)
     assert "DIST-ANALYTICS-OK" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_pipelined_apply_engine_parity_subprocess():
+    """One pipelined (K, B, ...) scanned program over 2 placeholder devices
+    is BIT-EXACT vs K sequential per-batch ``make_apply_edges`` calls — on
+    a hub-heavy stream whose overflow defrag fires MID-super-batch (tiny
+    probe window, k_big=1), plus a ragged K' < K trailing super-batch, and
+    equally under the compacted (route_budget) router."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.core.sort import SortSpec
+        from repro.core.sort_optimizer import optimize_sort
+        from repro.core import edgepool as ep
+        from repro.core.keys import pack_keys
+        from repro.dist.graph_engine import (make_sharded_state,
+            make_apply_edges, make_apply_edges_pipelined)
+        mesh = jax.make_mesh((2,), ("data",), axis_types=(AxisType.Auto,))
+        cfg = optimize_sort(256, 32, 5)
+        sspec = SortSpec.from_config(cfg, 1024)
+        pspec = ep.PoolSpec(n_blocks=1024, block_size=8, k_max=32, dmax=256,
+                            probe_width=8, k_big=1)
+        rng = np.random.default_rng(9)
+        ids = rng.choice(2**32, 100, replace=False).astype(np.uint64)
+        hubs = ids[:6]                  # 6 hubs > k_big=1: defrag fallback
+        B, NB = 256, 5                  # K=3 -> super-batches [3, 2]
+        n_ops = B * NB
+        src = hubs[np.arange(n_ops) % len(hubs)]
+        dst = ids[rng.integers(0, len(ids), n_ops)]
+        w = rng.uniform(0.5, 2, n_ops).astype(np.float32)
+        w[rng.random(n_ops) < 0.1] = 0.0
+        sks = np.asarray(pack_keys(src, 32)).reshape(NB, B, 2)
+        dks = np.asarray(pack_keys(dst, 32)).reshape(NB, B, 2)
+        ws = w.reshape(NB, B); ms = np.ones((NB, B), bool)
+        for budget in (None, 64):
+            seq = jax.jit(make_apply_edges(sspec, pspec, mesh, "data",
+                                           route_budget=budget))
+            pipe = jax.jit(make_apply_edges_pipelined(
+                sspec, pspec, mesh, "data", route_budget=budget))
+            st_a = make_sharded_state(sspec, pspec, 2, 1024)
+            drop_a = np.zeros(2, np.int64)
+            for i in range(NB):
+                st_a, d = seq(st_a, jnp.asarray(sks[i]), jnp.asarray(dks[i]),
+                              jnp.asarray(ws[i]), jnp.asarray(ms[i]))
+                drop_a += np.asarray(d)
+            st_b = make_sharded_state(sspec, pspec, 2, 1024)
+            drop_b = np.zeros(2, np.int64)
+            for lo, hi in ((0, 3), (3, 5)):      # ragged tail K'=2 < K=3
+                st_b, d = pipe(st_b, jnp.asarray(sks[lo:hi]),
+                               jnp.asarray(dks[lo:hi]),
+                               jnp.asarray(ws[lo:hi]),
+                               jnp.asarray(ms[lo:hi]))
+                drop_b += np.asarray(d)
+            assert np.array_equal(drop_a, drop_b), (budget, drop_a, drop_b)
+            for a, b in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_b)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), budget
+            defrags = int(np.asarray(st_b.pool.defrags).sum())
+            assert defrags >= 1, "stream must exercise the mid-scan defrag"
+        print("PIPELINED-PARITY-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                          "PYTHONPATH": "src"},
+                         cwd=str(__import__("pathlib").Path(
+                             __file__).resolve().parents[1]), timeout=600)
+    assert "PIPELINED-PARITY-OK" in out.stdout, out.stderr[-2000:]
