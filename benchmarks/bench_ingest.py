@@ -164,6 +164,10 @@ def bench_hub(n_vertices: int, n_ops: int, batch: int, n_hubs: int,
             **_latency_stats(lat),
             "overflow_defrags": store.graph.num_defrags - d0,
             "defrag_ms": round(store.graph.defrag_ms, 1),
+            # the spike decomposed: host staging (python + dispatch) vs
+            # the blocked-on-device sync at the rebuild boundary
+            "defrag_host_ms": round(store.graph.defrag_host_ms, 1),
+            "defrag_sync_ms": round(store.graph.defrag_sync_ms, 1),
             "tiles_scanned": store.stats["tiles_scanned"],
             "live_edges": store.read(ReadOp("num_edges"))}
 
@@ -252,6 +256,8 @@ def _shard_worker(n_vertices: int, n_ops: int, batch: int, n_shards: int,
             "updates_per_s": _throughput(n_ops, dt), "shards": n_shards,
             "tiles_scanned": store.stats["tiles_scanned"],
             "defrags": store.stats["defrags"],
+            "defrag_host_ms": store.stats["defrag_host_ms"],
+            "defrag_sync_ms": store.stats["defrag_sync_ms"],
             "pipeline_depth": pipeline,
             "flushes": store.stats["flushes"],
             "super_batches": store.stats["super_batches"],

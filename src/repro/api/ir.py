@@ -16,7 +16,8 @@ from typing import Any, Mapping, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["OpBatch", "ReadOp", "AnalyticsOp", "ApplyResult"]
+__all__ = ["OpBatch", "ReadOp", "AnalyticsOp", "ApplyResult",
+           "AnalyticsResult"]
 
 _OP_KINDS = ("edges", "add_vertices", "delete_vertices")
 _READ_KINDS = ("lookup", "degree", "neighbors", "snapshot", "num_vertices",
@@ -141,6 +142,29 @@ class AnalyticsOp:
         """Hashable identity (epoch-memoization key in the service)."""
         return (self.name,) + tuple(sorted(
             (k, _freeze(v)) for k, v in self.params.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsResult:
+    """One analytics answer plus its provenance — what the incremental
+    engine chains from epoch to epoch.
+
+    ``value`` is the normalized (backend-independent) answer, exactly what
+    ``GraphStore.analytics`` returns. ``epoch`` is the capture sequence the
+    answer is valid at; ``mode`` records how it was produced (``scratch``
+    or ``incremental``) and ``reason`` why an advance fell back (empty
+    otherwise). ``iters`` is the iteration/round count of the producing
+    run. ``raw`` and ``handle`` are BACKEND-PRIVATE warm state (per-row
+    value arrays + the epoch handle they align with) — an advance consumes
+    them; treat them as opaque."""
+
+    value: Any
+    epoch: int
+    mode: str = "scratch"
+    iters: int = 0
+    reason: str = ""
+    raw: Any = dataclasses.field(default=None, repr=False)
+    handle: Any = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass(frozen=True)

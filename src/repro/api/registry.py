@@ -29,6 +29,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro import analytics as A
+from repro.analytics import incremental as inc
 from repro.core.keys import unpack_keys
 from repro.dist import graph_engine as ge
 
@@ -51,6 +52,24 @@ class AnalyticsSpec:
     ``absent`` is the per-vertex fill when a required ``'id'`` param names
     a vertex the graph has never seen (dist loops yield it naturally; the
     single path short-circuits to it).
+
+    The incremental engine hangs off two optional phases:
+
+    ``advance(prev_raw, delta, csr_prev, csr_cur, dyn, params)`` advances
+    the previous epoch's RAW per-row values (canonical form — what the
+    store keeps in ``AnalyticsResult.raw``) over one ``EpochDelta`` on
+    host ``HostCsr`` views, returning ``(raw, iters)`` or ``None`` to
+    force the scratch fallback. ``make_dist_warm(sspec, pspec, mesh,
+    axis, m_cap, budget, **static)`` builds the mesh program seeded from
+    the previous per-shard raw values (an extra trailing ``(n_shards,
+    n_cap)`` input) returning ``(vals, per_shard_iters)``. Either may be
+    absent — the store then answers from scratch and says so in
+    ``AnalyticsResult.mode``.
+
+    ``warm_guard(flags)`` (flags = ``epoch_delta.merged_flags``) returns
+    a fallback reason when the delta breaks the warm program's
+    monotonicity precondition — the device loops can't self-check the
+    way the host advances do, so the store gates before dispatching.
     """
 
     name: str
@@ -60,6 +79,9 @@ class AnalyticsSpec:
     result: str = "per_vertex"
     absent: Optional[float] = None
     canonical_single: Optional[Callable] = None
+    advance: Optional[Callable] = None
+    make_dist_warm: Optional[Callable] = None
+    warm_guard: Optional[Callable] = None
 
 
 ANALYTICS: Dict[str, AnalyticsSpec] = {}
@@ -111,16 +133,58 @@ register_analytics(AnalyticsSpec(
     make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=32:
         ge.make_bfs(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
                     frontier_budget=budget),
+    advance=lambda prev, delta, cp, cc, dyn, params:
+        inc.advance_bfs(prev, delta, cc, int(dyn[0]),
+                        int(params.get("max_iters", 32))),
+    make_dist_warm=lambda sspec, pspec, mesh, axis, m_cap, budget,
+    max_iters=32:
+        ge.make_bfs_warm(sspec, pspec, mesh, axis, m_cap,
+                         max_iters=max_iters, frontier_budget=budget),
+    warm_guard=lambda f: "deletes" if f["has_deletes"] else None,
     dyn=(("source", "id"),), absent=-1))
+
+
+def _pagerank_single(snap, iters=20, damping=0.85, tol=None):
+    """``tol=None`` keeps the fixed-iteration reference (bit-identical to
+    the pre-incremental entry); with a tolerance the loop runs to
+    convergence (``iters`` becomes the cap, floored at 100 so default
+    calls actually converge) and returns ``(pr, iters_run)``."""
+    if tol is None:
+        return A.pagerank(snap, iters=iters, damping=damping)
+    import jax.numpy as jnp
+    pr0 = jnp.zeros((snap.active.shape[0],), jnp.float32)
+    return inc.pagerank_converge(snap, pr0, iters=max(int(iters), 100),
+                                 damping=float(damping), tol=float(tol),
+                                 uniform0=True)
+
+
+def _pagerank_advance(prev, delta, cp, cc, dyn, params):
+    tol = params.get("tol")
+    if tol is None:
+        return None     # fixed-iteration ranks are path-dependent: scratch
+    return inc.advance_pagerank(prev, cc,
+                                damping=float(params.get("damping", 0.85)),
+                                tol=float(tol))
+
 
 register_analytics(AnalyticsSpec(
     name="pagerank",
-    single=lambda snap, iters=20, damping=0.85:
-        A.pagerank(snap, iters=iters, damping=damping),
+    single=_pagerank_single,
     make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, iters=20,
-    damping=0.85:
-        ge.make_pagerank(sspec, pspec, mesh, axis, m_cap, iters=iters,
-                         damping=damping, frontier_budget=budget)))
+    damping=0.85, tol=None:
+        ge.make_pagerank(sspec, pspec, mesh, axis, m_cap,
+                         iters=(iters if tol is None
+                                else max(int(iters), 100)),
+                         damping=damping, frontier_budget=budget,
+                         tol=tol),
+    advance=_pagerank_advance,
+    make_dist_warm=lambda sspec, pspec, mesh, axis, m_cap, budget,
+    iters=20, damping=0.85, tol=None:
+        None if tol is None else
+        ge.make_pagerank(sspec, pspec, mesh, axis, m_cap,
+                         iters=max(int(iters), 100), damping=damping,
+                         frontier_budget=budget, tol=float(tol),
+                         warm=True)))
 
 register_analytics(AnalyticsSpec(
     name="wcc",
@@ -128,6 +192,13 @@ register_analytics(AnalyticsSpec(
     make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=64:
         ge.make_wcc(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
                     frontier_budget=budget),
+    advance=lambda prev, delta, cp, cc, dyn, params:
+        inc.advance_wcc(prev, delta, cc),
+    make_dist_warm=lambda sspec, pspec, mesh, axis, m_cap, budget,
+    max_iters=64:
+        ge.make_wcc(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
+                    frontier_budget=budget, warm=True),
+    warm_guard=lambda f: "deletes" if f["has_deletes"] else None,
     canonical_single=_wcc_canonical))
 
 register_analytics(AnalyticsSpec(
@@ -137,6 +208,16 @@ register_analytics(AnalyticsSpec(
     make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget, max_iters=64:
         ge.make_sssp(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
                      frontier_budget=budget),
+    advance=lambda prev, delta, cp, cc, dyn, params:
+        inc.advance_sssp(prev, delta, cc, int(dyn[0]),
+                         int(params.get("max_iters", 64))),
+    make_dist_warm=lambda sspec, pspec, mesh, axis, m_cap, budget,
+    max_iters=64:
+        ge.make_sssp(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
+                     frontier_budget=budget, warm=True),
+    warm_guard=lambda f: ("deletes" if f["has_deletes"] else
+                          "weight-increase" if f["has_weight_increase"]
+                          else None),
     dyn=(("source", "id"),), absent=float(A.INF)))
 
 register_analytics(AnalyticsSpec(
@@ -160,4 +241,21 @@ register_analytics(AnalyticsSpec(
     name="triangle_count",
     single=lambda snap: A.triangle_count(snap),
     make_dist=None,     # intersection needs remote adjacency; future entry
+    result="scalar"))
+
+register_analytics(AnalyticsSpec(
+    name="degree_map",
+    single=lambda snap: snap.indptr[1:] - snap.indptr[:-1],
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget:
+        ge.make_degree_map(sspec, pspec, mesh, axis, m_cap),
+    advance=lambda prev, delta, cp, cc, dyn, params:
+        inc.advance_degree(prev, delta, cp, cc)))
+
+register_analytics(AnalyticsSpec(
+    name="num_edges",
+    single=lambda snap: snap.m,
+    make_dist=lambda sspec, pspec, mesh, axis, m_cap, budget:
+        ge.make_num_edges(sspec, pspec, mesh, axis, m_cap),
+    advance=lambda prev, delta, cp, cc, dyn, params:
+        inc.advance_num_edges(prev, delta),
     result="scalar"))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import edgepool as ep
+from repro.core import epoch_delta as ed
 from repro.core import radixgraph as rg
 from repro.core import vertex_table as vt_mod
 from repro.core.keys import pack_keys, unpack_keys
@@ -35,7 +36,7 @@ from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
 from repro.dist import graph_engine as ge
 
-from .ir import AnalyticsOp, ApplyResult, OpBatch, ReadOp
+from .ir import AnalyticsOp, AnalyticsResult, ApplyResult, OpBatch, ReadOp
 from .registry import AnalyticsSpec, analytics_spec
 
 __all__ = ["GraphStore", "Epoch", "LocalStore", "ShardedStore",
@@ -97,13 +98,16 @@ class LocalStore:
 
     backend = "local"
 
-    def __init__(self, m_cap: Optional[int] = None, **graph_kwargs):
+    def __init__(self, m_cap: Optional[int] = None,
+                 max_delta_frac: float = 0.1, **graph_kwargs):
         self.graph = RadixGraph(**graph_kwargs)
         self.n_shards = 1
         self.m_cap = m_cap or self.graph.pool_spec.capacity_entries
+        self.max_delta_frac = max_delta_frac
         self._seq = 0
         self.stats = dict(ops_applied=0, ops_dropped=0, defrags=0,
-                          defrag_ms=0.0, tiles_scanned=0,
+                          defrag_ms=0.0, defrag_host_ms=0.0,
+                          defrag_sync_ms=0.0, tiles_scanned=0,
                           flushes=0, super_batches=0,
                           host_stage_ms=0.0, device_sync_ms=0.0)
 
@@ -130,6 +134,8 @@ class LocalStore:
         # spike/scan accounting is a recorded artifact, not a debug log
         self.stats["defrags"] = g.num_defrags
         self.stats["defrag_ms"] = round(g.defrag_ms, 3)
+        self.stats["defrag_host_ms"] = round(g.defrag_host_ms, 3)
+        self.stats["defrag_sync_ms"] = round(g.defrag_sync_ms, 3)
         self.stats["tiles_scanned"] = g.tiles_scanned
         self.stats["flushes"] = g.pipe_flushes
         self.stats["super_batches"] = g.pipe_super_batches
@@ -211,14 +217,13 @@ class LocalStore:
         raise ValueError(op.kind)
 
     # ---- analytics ----
-    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
-        spec = analytics_spec(op.name)
-        state = self._state(at)
-        snap = self._snap(at)
-        params = dict(op.params)
+    def _resolve_dyn(self, spec: AnalyticsSpec, state, params: dict):
+        """Pop dyn params and resolve IDs -> row offsets. Returns
+        ``(dyn, dyn_rows, absent_source)``; ``dyn_rows`` carries the host
+        ints the advance phases take."""
         g = self.graph
         look = lambda s, k: _lookup(g.sort_spec, g.pool_spec, s, k)
-        dyn, absent_source = [], False
+        dyn, dyn_rows, absent_source = [], [], False
         for pname, kind in spec.dyn:
             v = params.pop(pname)
             if kind == "id":
@@ -226,6 +231,7 @@ class LocalStore:
                                     look)[0]
                 if off < 0:
                     absent_source = True
+                dyn_rows.append(max(int(off), 0))
                 dyn.append(jnp.int32(max(int(off), 0)))
             else:
                 ids = np.asarray(v, np.uint64)
@@ -237,28 +243,118 @@ class LocalStore:
                     # per-vertex source sets (BC): absent sources
                     # contribute nothing — drop them, like the mesh loop
                     dyn.append(jnp.asarray(off[off >= 0], jnp.int32))
+        return dyn, dyn_rows, absent_source
+
+    def _per_vertex_value(self, raw: np.ndarray, snap) -> dict:
+        active = np.asarray(snap.active)
+        vids = unpack_keys(np.asarray(snap.ids))
+        # .tolist() yields Python scalars in one C pass — no per-vertex
+        # .item() loop on the read path
+        return dict(zip(vids[active].tolist(), raw[active].tolist()))
+
+    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
+        return self.analytics_result(op, at).value
+
+    def analytics_result(self, op: AnalyticsOp, at: Optional[Epoch] = None,
+                         _reason: str = "") -> AnalyticsResult:
+        """From-scratch run, answered as an ``AnalyticsResult`` whose
+        ``raw`` per-row values seed a later ``analytics_advance``."""
+        spec = analytics_spec(op.name)
+        state = self._state(at)
+        snap = self._snap(at)
+        params = dict(op.params)
+        dyn, _rows, absent_source = self._resolve_dyn(spec, state, params)
         n_cap = snap.indptr.shape[0] - 1
+        iters = 0
         if absent_source:
             vals = np.full((n_cap,), spec.absent)
         else:
             args = [a[0] if isinstance(a, tuple) else a for a in dyn]
             vals = spec.single(snap, *args, **params)
+            if isinstance(vals, tuple):      # convergence entries: (v, it)
+                vals, it = vals
+                iters = int(np.asarray(it))
+        seq = at.seq if at is not None else self._seq
         if spec.result == "scalar":
-            return np.asarray(vals).item()
+            v = np.asarray(vals).item()
+            return AnalyticsResult(v, seq, "scratch", iters, _reason, v, at)
         if spec.result == "per_query":
             out = np.asarray(vals).copy()
             for a in dyn:
                 if isinstance(a, tuple):
                     out[np.asarray(a[1]) < 0] = 0   # absent queries -> 0
-            return out
+            return AnalyticsResult(out, seq, "scratch", iters, _reason,
+                                   None, at)
         if spec.canonical_single is not None:
             vals = spec.canonical_single(vals, snap)
-        vals = np.asarray(vals)
-        active = np.asarray(snap.active)
-        vids = unpack_keys(np.asarray(snap.ids))
-        # .tolist() yields Python scalars in one C pass — no per-vertex
-        # .item() loop on the read path
-        return dict(zip(vids[active].tolist(), vals[active].tolist()))
+        raw = np.asarray(vals)
+        return AnalyticsResult(self._per_vertex_value(raw, snap), seq,
+                               "scratch", iters, _reason, raw, at)
+
+    def _csr(self, at: Epoch) -> ed.HostCsr:
+        h = at.cache.get("hcsr")
+        if h is None:
+            h = at.cache["hcsr"] = ed.host_csr(self._snap(at))
+        return h
+
+    def _delta(self, prev: Epoch, cur: Epoch):
+        key = ("delta", prev.seq)
+        hit = cur.cache.get(key)
+        if hit is None:     # shared across every analytic chained E->E'
+            hit = cur.cache[key] = ed.extract_delta(
+                prev.state, cur.state, self._csr(prev), self._csr(cur))
+        return hit
+
+    def analytics_advance(self, op: AnalyticsOp, prev: AnalyticsResult,
+                          at: Optional[Epoch]) -> AnalyticsResult:
+        """Advance ``prev`` to epoch ``at`` over the delta, falling back
+        to ``analytics_result`` (with the reason recorded) whenever the
+        window or the algorithm refuses — callers always get the exact
+        answer, ``mode`` just says how it was produced."""
+        spec = analytics_spec(op.name)
+        if at is None or prev is None:
+            return self.analytics_result(op, at, _reason="no-warm")
+        if prev.epoch == at.seq:
+            return prev
+        if (spec.advance is None or spec.result == "per_query"
+                or prev.handle is None or prev.raw is None):
+            return self.analytics_result(op, at, _reason="no-warm")
+        delta, reason = self._delta(prev.handle, at)
+        if delta is None:
+            return self.analytics_result(op, at, _reason=reason)
+        if delta.n_changed > self.max_delta_frac * max(delta.m_cur, 1):
+            return self.analytics_result(op, at,
+                                         _reason="delta-too-large")
+        snap = self._snap(at)
+        params = dict(op.params)
+        _dyn, rows, absent = self._resolve_dyn(spec, at.state, params)
+        if absent:
+            return self.analytics_result(op, at, _reason="absent-source")
+        out = spec.advance(prev.raw, delta, self._csr(prev.handle),
+                           self._csr(at), tuple(rows), params)
+        if out is None:
+            return self.analytics_result(op, at,
+                                         _reason="advance-refused")
+        raw, iters = out
+        if spec.result == "scalar":
+            return AnalyticsResult(int(raw), at.seq, "incremental",
+                                   int(iters), "", int(raw), at)
+        raw = np.asarray(raw)
+        return AnalyticsResult(self._per_vertex_value(raw, snap), at.seq,
+                               "incremental", int(iters), "", raw, at)
+
+    # ---- epoch retention (MVCC pins for warm chains) ----
+    def pin_epoch(self, at: Epoch):
+        """Register ``at`` in the graph's MVCC version set (label —
+        derived from the capture seq — is private to the epoch chain)."""
+        self.graph.retain_version(at.state, -(1 + at.seq))
+
+    def release_epoch(self, at: Epoch):
+        self.graph.release_version(-(1 + at.seq))
+
+    @property
+    def retained_epochs(self) -> int:
+        return sum(1 for lab, _, _ in self.graph._versions if lab < 0)
 
 
 class ShardedStore:
@@ -289,6 +385,7 @@ class ShardedStore:
                  pipeline_depth: int = 8,
                  donate_steady_state: bool = True,
                  fuse_scan: bool = False,
+                 max_delta_frac: float = 0.1,
                  devices=None):
         from jax.sharding import AxisType
         assert batch % n_shards == 0 and query_batch % n_shards == 0, \
@@ -334,9 +431,12 @@ class ShardedStore:
         self._full_sync_cache = None   # (state-ref, synced-state) pair
         self._seen_defrags = 0
         self._pinned = None            # donation-exempt live state pytree
+        self.max_delta_frac = max_delta_frac
+        self._retained: Dict[int, Epoch] = {}   # pinned epoch chain
         self.stats = dict(ops_applied=0, ops_dropped=0,
                           sync_runs=0, sync_skips=0, defrags=0,
-                          defrag_ms=0.0, tiles_scanned=0,
+                          defrag_ms=0.0, defrag_host_ms=0.0,
+                          defrag_sync_ms=0.0, tiles_scanned=0,
                           flushes=0, super_batches=0,
                           host_stage_ms=0.0, device_sync_ms=0.0)
 
@@ -402,6 +502,31 @@ class ShardedStore:
         return self._fn(key, lambda: spec.make_dist(
             self.sspec, self.pspec, self.mesh, self.axis, self.m_cap,
             self.frontier_budget, **static))
+
+    def warm_program(self, name: str, **static) -> Callable:
+        """The jitted warm-advance mesh program (``make_dist_warm``):
+        ``f(state, *dyn, prev_raw) -> (values, iters)``. Shares the
+        ``("algw", ...)`` cache slot ``analytics_advance`` uses, and is
+        the AOT entry ``dryrun_graph --mode analytics --incremental``
+        lowers. Raises for algorithms with no warm form (or whose knobs
+        disable it, e.g. fixed-iteration PageRank)."""
+        spec = analytics_spec(name)
+        if spec.make_dist_warm is None:
+            raise NotImplementedError(
+                f"analytics op {name!r} has no warm mesh program "
+                f"registered (repro.api.registry)")
+        key = ("algw", name, tuple(sorted(static.items())))
+        f = self._fns.get(key)
+        if f is None:
+            built = spec.make_dist_warm(
+                self.sspec, self.pspec, self.mesh, self.axis, self.m_cap,
+                self.frontier_budget, **static)
+            if built is None:
+                raise NotImplementedError(
+                    f"analytics op {name!r} refuses a warm program for "
+                    f"{static!r} (path-dependent without a tolerance)")
+            f = self._fns[key] = jax.jit(built)
+        return f
 
     def state_struct(self):
         """Shape/dtype pytree of a fresh sharded state (AOT lowering)."""
@@ -485,9 +610,14 @@ class ShardedStore:
         dropped = int(sum(int(np.asarray(d).sum()) for d in drops))
         dsum = int(np.asarray(self.state.pool.defrags).sum())
         if dsum != self._seen_defrags:            # some shard rebuilt
+            now = time.perf_counter()
             self.stats["defrag_ms"] = round(
-                self.stats["defrag_ms"] +
-                (time.perf_counter() - t0) * 1000.0, 3)
+                self.stats["defrag_ms"] + (now - t0) * 1000.0, 3)
+            # split: staged/dispatched up to t1, device-blocked after
+            self.stats["defrag_host_ms"] = round(
+                self.stats["defrag_host_ms"] + (t1 - t0) * 1000.0, 3)
+            self.stats["defrag_sync_ms"] = round(
+                self.stats["defrag_sync_ms"] + (now - t1) * 1000.0, 3)
             self._seen_defrags = dsum
         self.stats["device_sync_ms"] = round(
             self.stats["device_sync_ms"] +
@@ -638,13 +768,9 @@ class ShardedStore:
         raise ValueError(op.kind)
 
     # ---- analytics ----
-    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
-        spec = analytics_spec(op.name)
-        if op.name == "wcc" and self.key_bits > 32:
-            raise NotImplementedError(
-                "distributed WCC labels are single uint32 words (min "
-                "vertex ID): key_bits > 32 needs a two-word label loop")
-        params = dict(op.params)
+    def _resolve_dyn(self, spec: AnalyticsSpec, params: dict):
+        """Pop dyn params and resolve IDs -> packed mesh keys. Returns
+        ``(dyn, query_ids)``."""
         dyn, query_ids = [], None
         for pname, kind in spec.dyn:
             v = params.pop(pname)
@@ -664,8 +790,26 @@ class ShardedStore:
                 buf = np.full((Sp, 2), 0xFFFFFFFF, np.uint32)
                 buf[:len(ids)] = self._keys(ids)
                 dyn.append(jnp.asarray(buf))
+        return dyn, query_ids
+
+    def analytics(self, op: AnalyticsOp, at: Optional[Epoch] = None):
+        return self.analytics_result(op, at).value
+
+    def analytics_result(self, op: AnalyticsOp, at: Optional[Epoch] = None,
+                         _reason: str = "") -> AnalyticsResult:
+        """From-scratch mesh run as an ``AnalyticsResult``; ``raw`` keeps
+        the per-shard ``(n_shards, n_cap)`` values (scalar results: the
+        per-shard partials) a later ``analytics_advance`` seeds from."""
+        spec = analytics_spec(op.name)
+        if op.name == "wcc" and self.key_bits > 32:
+            raise NotImplementedError(
+                "distributed WCC labels are single uint32 words (min "
+                "vertex ID): key_bits > 32 needs a two-word label loop")
+        params = dict(op.params)
+        dyn, query_ids = self._resolve_dyn(spec, params)
         fn = self.analytics_program(op.name, **params)
         state = self._synced(self._state(at))
+        seq = at.seq if at is not None else self._seq
         if query_ids is not None:
             # query batches ride the shard partition in fixed
             # ``query_batch`` chunks (ONE compiled shape, like the degree
@@ -680,11 +824,124 @@ class ShardedStore:
                 buf[:n_c] = keys[lo:lo + n_c]
                 vals = np.asarray(fn(state, jnp.asarray(buf), *dyn))
                 out[lo:lo + n_c] = vals[:n_c]
-            return out
+            return AnalyticsResult(out, seq, "scratch", 0, _reason,
+                                   None, at)
         vals = fn(state, *dyn)
-        return _values_item(
-            ge.collect_owner_values(state, np.asarray(vals),
-                                    self.n_shards))
+        iters = 0
+        if isinstance(vals, tuple):         # convergence entries: (v, it)
+            vals, it = vals
+            iters = int(np.asarray(it).max())
+        raw = np.asarray(vals)
+        if spec.result == "scalar":
+            return AnalyticsResult(int(raw.sum()), seq, "scratch", iters,
+                                   _reason, raw, at)
+        value = _values_item(
+            ge.collect_owner_values(state, raw, self.n_shards))
+        return AnalyticsResult(value, seq, "scratch", iters, _reason,
+                               raw, at)
+
+    def _csrs(self, at: Epoch):
+        """Per-shard host CSR views of an epoch, cached on the handle."""
+        h = at.cache.get("hcsr")
+        if h is None:
+            fn = self._fn(("snapshot",), lambda: ge.make_snapshot(
+                self.sspec, self.pspec, self.mesh, self.axis, self.m_cap))
+            snaps = fn(at.state)
+            indptr = np.asarray(snaps.indptr)
+            dst = np.asarray(snaps.dst)
+            w = np.asarray(snaps.weight)
+            act = np.asarray(snaps.active)
+            ids = np.asarray(snaps.ids)
+            m = np.asarray(snaps.m)
+            h = at.cache["hcsr"] = [
+                ed.HostCsr(indptr=indptr[s], dst=dst[s], weight=w[s],
+                           active=act[s], ids=ids[s], m=int(m[s]))
+                for s in range(self.n_shards)]
+        return h
+
+    def _delta(self, prev: Epoch, cur: Epoch):
+        key = ("delta", prev.seq)
+        hit = cur.cache.get(key)
+        if hit is None:     # shared across every analytic chained E->E'
+            hit = cur.cache[key] = ed.extract_delta_sharded(
+                prev.state, cur.state, self._csrs(prev), self._csrs(cur))
+        return hit
+
+    def analytics_advance(self, op: AnalyticsOp, prev: AnalyticsResult,
+                          at: Optional[Epoch]) -> AnalyticsResult:
+        """Advance ``prev`` to epoch ``at``: warm mesh program when the
+        registry has one (``make_dist_warm``), per-shard host advance
+        otherwise (degree/num_edges — shard-local by the edge-placement
+        invariant); any refusal falls back to scratch with the reason."""
+        spec = analytics_spec(op.name)
+        if at is None or prev is None:
+            return self.analytics_result(op, at, _reason="no-warm")
+        if prev.epoch == at.seq:
+            return prev
+        if (spec.result == "per_query" or prev.handle is None
+                or prev.raw is None or not self.sync_incremental
+                or (spec.make_dist_warm is None and spec.advance is None)):
+            return self.analytics_result(op, at, _reason="no-warm")
+        deltas, reason = self._delta(prev.handle, at)
+        if deltas is None:
+            return self.analytics_result(op, at, _reason=reason)
+        flags = ed.merged_flags(deltas)
+        if flags["n_changed"] > self.max_delta_frac * \
+                max(flags["m_cur"], 1):
+            return self.analytics_result(op, at,
+                                         _reason="delta-too-large")
+        if spec.warm_guard is not None:
+            why = spec.warm_guard(flags)
+            if why:
+                return self.analytics_result(op, at, _reason=why)
+        params = dict(op.params)
+        dyn, _q = self._resolve_dyn(spec, params)
+        if spec.make_dist_warm is not None:
+            key = ("algw", op.name, tuple(sorted(params.items())))
+            if key not in self._fns:
+                f = spec.make_dist_warm(
+                    self.sspec, self.pspec, self.mesh, self.axis,
+                    self.m_cap, self.frontier_budget, **params)
+                if f is None:       # e.g. fixed-iteration PageRank
+                    return self.analytics_result(
+                        op, at, _reason="no-warm-program")
+                self._fns[key] = jax.jit(f)
+            fn = self._fns[key]
+            vals, it = fn(at.state, *dyn, jnp.asarray(prev.raw))
+            iters = int(np.asarray(it).max())
+            raw = np.asarray(vals)
+        else:
+            pcsrs, ccsrs = self._csrs(prev.handle), self._csrs(at)
+            raws, iters = [], 0
+            for s in range(self.n_shards):
+                o = spec.advance(prev.raw[s], deltas[s], pcsrs[s],
+                                 ccsrs[s], (), params)
+                if o is None:
+                    return self.analytics_result(
+                        op, at, _reason="advance-refused")
+                r, its = o
+                raws.append(r)
+                iters = max(iters, int(its))
+            raw = np.asarray(raws) if spec.result == "scalar" \
+                else np.stack(raws)
+        if spec.result == "scalar":
+            return AnalyticsResult(int(np.asarray(raw).sum()), at.seq,
+                                   "incremental", iters, "", raw, at)
+        value = _values_item(
+            ge.collect_owner_values(at.state, raw, self.n_shards))
+        return AnalyticsResult(value, at.seq, "incremental", iters, "",
+                               raw, at)
+
+    # ---- epoch retention (warm-chain pins) ----
+    def pin_epoch(self, at: Epoch):
+        self._retained[at.seq] = at
+
+    def release_epoch(self, at: Epoch):
+        self._retained.pop(at.seq, None)
+
+    @property
+    def retained_epochs(self) -> int:
+        return len(self._retained)
 
 
 # ---- backend registry ----

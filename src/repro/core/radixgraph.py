@@ -284,6 +284,11 @@ class RadixGraph:
         # paid a global rebuild — explicit defrags and apply batches that
         # triggered one (the tier-L fallback spikes) — and how many did
         self.defrag_ms: float = 0.0
+        # defrag_ms split: host-stage (staging + async dispatch) vs the
+        # device-blocked sync tail of the spiking window — separable
+        # because every spike window already records its stage/sync split
+        self.defrag_host_ms: float = 0.0
+        self.defrag_sync_ms: float = 0.0
         self.defrag_batches: int = 0
         self._seen_defrags: int = 0
         # pipelined-apply accounting: a flush is one ``_apply_edge_batches``
@@ -400,13 +405,20 @@ class RadixGraph:
                           for a in range(lo, hi, B)]
             i += k
 
-    def _note_spike(self, t0: float):
+    def _note_spike(self, t0: float, t1: Optional[float] = None):
         """Attribute the finished op's wall time to the spike accounting
         when it paid a global rebuild (the pool's defrags counter
-        advanced past the watermark)."""
+        advanced past the watermark). ``t1`` is the stage->sync boundary
+        of the window; the split lands in ``defrag_host_ms`` /
+        ``defrag_sync_ms`` (``t1=None`` books everything as host time)."""
         d = int(self.state.pool.defrags)
         if d != self._seen_defrags:
-            self.defrag_ms += (time.perf_counter() - t0) * 1000.0
+            now = time.perf_counter()
+            self.defrag_ms += (now - t0) * 1000.0
+            self.defrag_host_ms += ((t1 if t1 is not None else now) - t0) \
+                * 1000.0
+            if t1 is not None:
+                self.defrag_sync_ms += (now - t1) * 1000.0
             self.defrag_batches += d - self._seen_defrags
             self._seen_defrags = d
 
@@ -451,7 +463,7 @@ class RadixGraph:
         self.dropped_ops += sum(int(d) for d in drops)
         self.pipe_sync_ms += (time.perf_counter() - t1) * 1000.0
         self.pipe_flushes += 1
-        self._note_spike(t0)
+        self._note_spike(t0, t1)
 
     def add_edges(self, src, dst, weight=None):
         w = np.ones(len(np.asarray(src)), np.float32) if weight is None \
@@ -548,6 +560,18 @@ class RadixGraph:
                                self.state))
         return ts
 
+    def retain_version(self, state: GraphState, label: int):
+        """Retain an ARBITRARY captured state (not necessarily the live
+        one) as an MVCC version — the epoch-chain pin: a warm analytics
+        entry keeps its epoch's arrays reachable and time-travel-readable
+        until ``release_version(label)``. The version timestamp is the
+        captured state's own clock."""
+        ts = int(state.pool.clock) - 1
+        if state is self.state:
+            self.pin_live_state()   # retained version must never be donated
+        self._versions.append((label, ts, state))
+        return ts
+
     def release_version(self, label: int) -> int:
         """Drop retained MVCC versions with the given label (as returned by /
         passed to ``checkpoint_version``) so their device arrays can be
@@ -580,8 +604,9 @@ class RadixGraph:
         t0 = time.perf_counter()
         self.state = _defrag(self.sort_spec, self.pool_spec, self.state,
                              incoming)
+        t1 = time.perf_counter()
         jax.block_until_ready(self.state.pool.dst)
-        self._note_spike(t0)
+        self._note_spike(t0, t1)
 
     # ---- introspection ----
     @property

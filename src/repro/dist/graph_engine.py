@@ -704,7 +704,8 @@ def _owner_value_route(sspec, g: GraphState, n: int, axis: str, a2a, owner,
 
 def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                   m_cap: int, iters: int = 20, damping: float = 0.85,
-                  frontier_budget: Optional[int] = None):
+                  frontier_budget: Optional[int] = None,
+                  tol: Optional[float] = None, warm: bool = False):
     """Build ``pr(state) -> float32[n_shards, n_cap]`` — distributed
     PageRank. Ranks live at owner rows; per iteration each shard scatters
     contributions along its local CSR (``analytics.pagerank_scatter``) and
@@ -712,14 +713,24 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     one all_to_all (the combine phase). Dangling mass and the active count
     are psums over owner rows. Run on a vertex-synced state.
 
+    ``tol=None`` (default) is the fixed-``iters`` scan — bit-identical to
+    the pre-incremental program. ``tol`` set switches to a convergence
+    while_loop (stop when the owner-row ``max|Δpr|`` pmax drops under
+    ``tol``, ``iters`` now a cap) returning ``(pr, iters_run)``; ``warm``
+    additionally takes a ``(n_shards, n_cap)`` float32 seed (negative =
+    no previous value, start uniform) — the damped map has ONE fixed
+    point, so warm and cold starts converge to the same answer and the
+    warm program is the epoch-advance path.
+
     The inflow route is data-independent (every live row -> its owner), so
     with ``frontier_budget`` the whole run compacts when the live rows fit
     the budget (one replicated psum up front; otherwise the dense route runs
     unchanged). Per-target add order is preserved, so ranks match the dense
     path bit-for-bit."""
     n = int(mesh.shape[axis])
+    assert not (warm and tol is None), "warm PageRank needs a tol"
 
-    def body(state):
+    def body(state, *extra):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
         snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
@@ -732,34 +743,58 @@ def make_pagerank(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         n_act = jnp.maximum(jax.lax.psum(
             jnp.sum(mine.astype(jnp.float32)), axis), 1.0)
         pr0 = jnp.where(mine, 1.0 / n_act, 0.0)
+        if warm:
+            w0 = extra[0][0]
+            pr0 = jnp.where(mine & (w0 >= 0), w0, pr0)
 
         def impl(rtgt, fwd, bwd):
-            def step(pr, _):
+            def one(pr):
                 contrib = alg.pagerank_contrib(snap, pr)
                 local_in = alg.pagerank_scatter(snap, contrib, edges)
                 rv = fwd(local_in[:, None])[:, 0]
                 inflow = jnp.zeros((n_cap + 1,)).at[rtgt].add(rv)[:n_cap]
                 dangling = jax.lax.psum(
                     jnp.sum(jnp.where(mine & (deg == 0), pr, 0.0)), axis)
-                pr = jnp.where(mine, (1 - damping) / n_act +
-                               damping * (inflow + dangling / n_act), 0.0)
-                return pr, None
+                return jnp.where(mine, (1 - damping) / n_act +
+                                 damping * (inflow + dangling / n_act), 0.0)
 
-            pr, _ = jax.lax.scan(step, pr0, None, length=iters)
-            return pr
+            if tol is None:
+                pr, _ = jax.lax.scan(lambda pr, _: (one(pr), None), pr0,
+                                     None, length=iters)
+                return pr
 
-        pr = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
-                                frontier_budget, impl)
-        return pr[None]
+            def cond(c):
+                _, ch, it = c
+                return (ch >= tol) & (it < iters)
 
-    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
-                        out_specs=P(axis), check_rep=False)
+            def step(c):
+                pr, _, it = c
+                nxt = one(pr)
+                ch = jax.lax.pmax(jnp.max(jnp.where(
+                    mine, jnp.abs(nxt - pr), 0.0)), axis)
+                return nxt, ch, it + 1
+
+            pr, _, it = jax.lax.while_loop(
+                cond, step, (pr0, jnp.float32(jnp.inf), jnp.int32(0)))
+            return pr, it
+
+        out = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                 frontier_budget, impl)
+        if tol is None:
+            return out[None]
+        pr, it = out
+        return pr[None], it[None]
+
+    in_specs = (P(axis),) + ((P(axis),) if warm else ())
+    out_specs = P(axis) if tol is None else (P(axis), P(axis))
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
     return sharded
 
 
 def make_wcc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
              m_cap: int, max_iters: int = 64,
-             frontier_budget: Optional[int] = None):
+             frontier_budget: Optional[int] = None, warm: bool = False):
     """Build ``wcc(state) -> uint32[n_shards, n_cap]`` — distributed weakly
     connected components by min-label propagation. Labels are CANONICAL
     across shard counts: each component converges to the minimum live vertex
@@ -775,11 +810,17 @@ def make_wcc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     min-scatter and the merged label is broadcast back over the inverse
     all_to_all, so every copy of a vertex re-enters the next round with the
     global value. Terminates when no OWNER row improved (exact: copies are
-    equal at round start, so any improvement lowers the owner's min)."""
+    equal at round start, so any improvement lowers the owner's min).
+
+    ``warm`` adds a ``(n_shards, n_cap)`` uint32 label seed (a previous
+    epoch's output verbatim — UMAX at then-dead rows is the identity under
+    min) and returns ``(labels, iters_run)``. Insert-only deltas only merge
+    components, so prev labels are still valid upper bounds and propagation
+    reaches the same min-ID fixed point in far fewer rounds."""
     n = int(mesh.shape[axis])
     UMAX = jnp.uint32(0xFFFFFFFF)
 
-    def body(state):
+    def body(state, *extra):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
         snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
@@ -789,6 +830,8 @@ def make_wcc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
                                 split_axis=0, concat_axis=0)
         lab0 = jnp.where(rowlive, g.vt.ids[:, 1], UMAX)
+        if warm:
+            lab0 = jnp.where(rowlive, jnp.minimum(lab0, extra[0][0]), UMAX)
 
         def impl(rtgt, fwd, bwd):
             def cond(c):
@@ -809,22 +852,25 @@ def make_wcc(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                     jnp.int32), axis) > 0
                 return nl, ch, it + 1
 
-            lab, _, _ = jax.lax.while_loop(
+            lab, _, it = jax.lax.while_loop(
                 cond, step, (lab0, jnp.bool_(True), jnp.int32(0)))
-            return lab
+            return lab, it
 
-        lab = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
-                                 frontier_budget, impl)
-        return jnp.where(rowlive, lab, UMAX)[None]
+        lab, it = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                     frontier_budget, impl)
+        out = jnp.where(rowlive, lab, UMAX)[None]
+        return (out, it[None]) if warm else out
 
-    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
-                        out_specs=P(axis), check_rep=False)
+    in_specs = (P(axis),) + ((P(axis),) if warm else ())
+    out_specs = (P(axis), P(axis)) if warm else P(axis)
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
     return sharded
 
 
 def make_sssp(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
               m_cap: int, max_iters: int = 64,
-              frontier_budget: Optional[int] = None):
+              frontier_budget: Optional[int] = None, warm: bool = False):
     """Build ``sssp(state, source_key) -> float32[n_shards, n_cap]`` —
     distributed Bellman-Ford (non-negative weights). Per round each shard
     relaxes its LOCAL edges (``min(dist[u] + w)`` — the same float op the
@@ -832,11 +878,17 @@ def make_sssp(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
     min-scatter, and the merged distance is broadcast back to every copy.
     min is exact in floating point and the edge set is partitioned, so the
     per-round distances — and the round count — are BIT-EXACT against
-    ``analytics.sssp``. Run on a vertex-synced state; INF = unreachable."""
+    ``analytics.sssp``. Run on a vertex-synced state; INF = unreachable.
+
+    ``warm`` adds a ``(n_shards, n_cap)`` float32 distance seed (a previous
+    epoch's output verbatim — INF at then-dead rows) and returns
+    ``(dist, iters_run)``. Valid for insert / weight-decrease deltas only
+    (prev distances stay upper bounds); the min-relax fixed point is
+    schedule-independent, so the warm run converges to the scratch answer."""
     n = int(mesh.shape[axis])
     INF = alg.INF
 
-    def body(state, source_key):
+    def body(state, source_key, *extra):
         g = jax.tree.map(lambda x: x[0], state)
         n_cap = g.vt.del_time.shape[0]
         snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
@@ -850,6 +902,8 @@ def make_sssp(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
         off0 = sort_mod.lookup(sspec, g.sort, source_key[None, :])[0]
         row = jnp.arange(n_cap, dtype=jnp.int32)
         dist0 = jnp.where((row == off0) & rowlive, 0.0, INF)
+        if warm:
+            dist0 = jnp.where(rowlive, jnp.minimum(dist0, extra[0][0]), INF)
 
         def impl(rtgt, fwd, bwd):
             def cond(c):
@@ -869,15 +923,116 @@ def make_sssp(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
                     jnp.int32), axis) > 0
                 return nd, ch, it + 1
 
-            dist, _, _ = jax.lax.while_loop(
+            dist, _, it = jax.lax.while_loop(
                 cond, step, (dist0, jnp.bool_(True), jnp.int32(0)))
-            return dist
+            return dist, it
 
-        dist = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
-                                  frontier_budget, impl)
-        return jnp.where(rowlive, dist, INF)[None]
+        dist, it = _owner_value_route(sspec, g, n, axis, a2a, owner,
+                                      rowlive, frontier_budget, impl)
+        out = jnp.where(rowlive, dist, INF)[None]
+        return (out, it[None]) if warm else out
 
-    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P()),
+    in_specs = (P(axis), P()) + ((P(axis),) if warm else ())
+    out_specs = (P(axis), P(axis)) if warm else P(axis)
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    return sharded
+
+
+def make_bfs_warm(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                  m_cap: int, max_iters: int = 32,
+                  frontier_budget: Optional[int] = None):
+    """Build ``bfs_warm(state, source_key, warm) -> (int32[n_shards,
+    n_cap], iters)`` — distributed BFS as integer min-plus relaxation
+    seeded from a previous epoch's depths (``-1`` = unknown). Unlike the
+    level-synchronous ``make_bfs`` this converges from ANY upper-bound
+    seed: prev depths are upper bounds after an insert-only delta, the
+    min-relax fixed point is the true BFS distance, and depths beyond
+    ``max_iters`` mask to -1 exactly like the scratch program's level cap.
+    Stub-row depths are authoritative here too (the owner broadcast runs
+    every round), so parity vs scratch holds at owner rows."""
+    n = int(mesh.shape[axis])
+    BIG = jnp.int32(1 << 30)
+
+    def body(state, source_key, warm_vals):
+        g = jax.tree.map(lambda x: x[0], state)
+        n_cap = g.vt.del_time.shape[0]
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        src, ok_e, dst = alg.csr_edges(snap)
+        srcc = jnp.clip(src, 0, n_cap - 1)
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=axis,
+                                split_axis=0, concat_axis=0)
+
+        off0 = sort_mod.lookup(sspec, g.sort, source_key[None, :])[0]
+        row = jnp.arange(n_cap, dtype=jnp.int32)
+        w0 = warm_vals[0]
+        d0 = jnp.where(rowlive & (w0 >= 0), w0, BIG)
+        d0 = jnp.where((row == off0) & rowlive, 0, d0)
+
+        def impl(rtgt, fwd, bwd):
+            def cond(c):
+                _, changed, it = c
+                return changed & (it < 2 * max_iters + 2)
+
+            def step(c):
+                d, _, it = c
+                cand = jnp.where(ok_e, jnp.minimum(d[srcc], BIG) + 1, BIG)
+                relax = jnp.full((n_cap + 1,), BIG, jnp.int32).at[
+                    dst].min(cand)
+                nd = jnp.minimum(d, relax[:n_cap])
+                merged = jnp.full((n_cap + 1, 1), BIG, jnp.int32).at[
+                    rtgt].min(fwd(nd[:, None]))
+                back, okb = bwd(merged)
+                nd = jnp.where(okb, back[:, 0], nd)
+                ch = jax.lax.psum(jnp.any(mine & (nd < d)).astype(
+                    jnp.int32), axis) > 0
+                return nd, ch, it + 1
+
+            d, _, it = jax.lax.while_loop(
+                cond, step, (d0, jnp.bool_(True), jnp.int32(0)))
+            return d, it
+
+        d, it = _owner_value_route(sspec, g, n, axis, a2a, owner, rowlive,
+                                   frontier_budget, impl)
+        out = jnp.where(rowlive & (d <= max_iters), d, -1)[None]
+        return out, it[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis), P(), P(axis)),
+                        out_specs=(P(axis), P(axis)), check_rep=False)
+    return sharded
+
+
+def make_degree_map(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                    m_cap: int):
+    """Build ``deg(state) -> int32[n_shards, n_cap]`` — live out-degree at
+    owner rows. Edges live in the source vertex's hash-owner shard (stub
+    rows carry no adjacency), so the local CSR indptr diff at owner rows IS
+    the full degree — no exchange needed."""
+    n = int(mesh.shape[axis])
+
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        my, rowlive, owner, mine = _row_meta(sspec, g, n, axis)
+        deg = snap.indptr[1:] - snap.indptr[:-1]
+        return jnp.where(mine, deg, 0)[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                        out_specs=P(axis), check_rep=False)
+    return sharded
+
+
+def make_num_edges(sspec: SortSpec, pspec: ep.PoolSpec, mesh, axis: str,
+                   m_cap: int):
+    """Build ``m(state) -> int32[n_shards]`` — per-shard live-edge
+    partials; the store sums them host-side (scalar-result contract)."""
+    def body(state):
+        g = jax.tree.map(lambda x: x[0], state)
+        snap = rg.step_snapshot(sspec, pspec, m_cap, g, None)
+        return snap.m.astype(jnp.int32)[None]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(axis),),
                         out_specs=P(axis), check_rep=False)
     return sharded
 

@@ -9,7 +9,9 @@ driven through the unified ``repro.api.GraphStore`` front door:
   256/512-shard meshes;
 * ``--mode analytics``: registered mesh analytics — BFS and PageRank by
   default, ``--algs wcc,sssp,bc`` for the full registry — compiled as one
-  fused SPMD program each;
+  fused SPMD program each; ``--incremental`` additionally lowers each
+  algorithm's warm-advance form (the epoch-delta incremental program,
+  seeded from a previous epoch's values) as ``<alg>__advance``;
 * ``--mode serve``: actually RUNS a small mixed read/write workload through
   ``serve.graph_service`` on placeholder shards and records throughput.
 
@@ -126,6 +128,17 @@ def _mode_analytics(args, store, n):
         "sssp": (dict(max_iters=16), (state_struct, key_struct)),
         "bc": (dict(max_depth=8), (state_struct, keys_struct)),
     }
+    # warm-advance forms (--incremental): static knobs, extra dynamic-arg
+    # structs, and the per-row warm value dtype the program is seeded with
+    # (PageRank needs a tolerance — its fixed-iteration form has no warm
+    # program by design)
+    warm_catalog = {
+        "bfs": (dict(max_iters=16), (key_struct,), jnp.int32),
+        "pagerank": (dict(iters=8, damping=0.85, tol=1e-6), (),
+                     jnp.float32),
+        "wcc": (dict(max_iters=16), (), jnp.uint32),
+        "sssp": (dict(max_iters=16), (key_struct,), jnp.float32),
+    }
     recs = {}
     for alg_name in args.algs.split(","):
         static, in_structs = catalog[alg_name]
@@ -133,7 +146,18 @@ def _mode_analytics(args, store, n):
         compiled = store.analytics_program(alg_name, **static).lower(
             *in_structs).compile()
         recs[alg_name] = _compile_stats(compiled, time.time() - t0)
-    tag = "" if fb is None else f"__frontier{fb}"
+        if not args.incremental or alg_name not in warm_catalog:
+            continue
+        wstatic, wdyn, vdt = warm_catalog[alg_name]
+        n_cap = state_struct.vt.del_time.shape[-1]
+        t0 = time.time()
+        compiled = store.warm_program(alg_name, **wstatic).lower(
+            state_struct, *wdyn,
+            jax.ShapeDtypeStruct((n, n_cap), vdt)).compile()
+        recs[alg_name + "__advance"] = _compile_stats(
+            compiled, time.time() - t0)
+    tag = ("" if fb is None else f"__frontier{fb}") + \
+        ("__incremental" if args.incremental else "")
     rec = {
         "arch": "radixgraph-analytics", "shape": f"mcap{store.m_cap}",
         "mesh": f"graph{n}" + ("" if fb is None else f"+frontier{fb}"),
@@ -206,6 +230,10 @@ def main(argv=None):
     ap.add_argument("--algs", default="bfs,pagerank",
                     help="analytics mode: comma list from the registry "
                          "(bfs,pagerank,wcc,sssp,bc)")
+    ap.add_argument("--incremental", action="store_true",
+                    help="analytics mode: also lower each algorithm's "
+                         "warm-advance mesh program (epoch-delta "
+                         "incremental form), recorded as <alg>__advance")
     args = ap.parse_args(argv)
 
     n = args.shards

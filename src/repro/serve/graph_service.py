@@ -22,6 +22,15 @@ Scheduling per ``step()``:
    through ``store.analytics`` and is memoized per epoch;
 3. **seal phase** — every ``seal_every`` steps the live state is published
    as the new read epoch (``store.capture()``).
+
+Sealed epochs CHAIN: instead of discarding the analytics memo at each
+seal, warm results (``AnalyticsResult`` with backend-private per-row
+values) are advanced over the epoch delta by the store's incremental
+engine (``analytics_advance``), falling back to scratch — with the reason
+recorded — whenever the window refuses. Warm states live in an LRU
+bounded by ``max_warm_states``; each pins its epoch via the store's
+refcounted ``pin_epoch``/``release_epoch`` so MVCC retention plateaus
+instead of growing with the write stream.
 """
 from __future__ import annotations
 
@@ -71,7 +80,8 @@ class GraphQueryService:
                  query_batch: Optional[int] = None, seal_every: int = 1,
                  max_pending: int = 65536, bfs_iters: int = 32,
                  pr_iters: int = 20, damping: float = 0.85,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: int = 1, incremental: bool = True,
+                 max_warm_states: int = 8):
         self.store = store
         self.n_shards = store.n_shards
         self.write_batch = write_batch or getattr(
@@ -87,10 +97,17 @@ class GraphQueryService:
         self.bfs_iters = bfs_iters
         self.pr_iters = pr_iters
         self.damping = damping
+        # epoch-chained analytics: warm results advance across seals
+        # instead of recomputing; bounded LRU + refcounted epoch pins
+        self.incremental = incremental
+        self.max_warm_states = max_warm_states
+        self._warm = collections.OrderedDict()  # cache_key -> AnalyticsResult
+        self._pins: Dict[int, list] = {}        # epoch seq -> [handle, refs]
 
         # sealed read epoch (immutable capture, O(1) to publish)
         self.epoch = 0
         self._sealed = store.capture()
+        self._retain(self._sealed)
         self._analytics_cache: Dict = {}    # op.cache_key() -> result
         self._epoch_sync_counted = False
 
@@ -101,7 +118,8 @@ class GraphQueryService:
         self.results: Dict[int, object] = {}
         self._stats = dict(steps=0, queries_answered=0, epochs_sealed=0,
                            sync_reused=0, write_flushes=0,
-                           inflight_write_batches=0)
+                           inflight_write_batches=0, analytics_scratch=0,
+                           analytics_incremental=0, warm_evictions=0)
 
     @property
     def stats(self) -> dict:
@@ -113,7 +131,10 @@ class GraphQueryService:
         (device batches the LAST flush dispatched), plus the store's own
         ``flushes``/``super_batches`` pipeline counters."""
         return {**getattr(self.store, "stats", {}), **self._stats,
-                "queued_write_ops": self.pending_writes}
+                "queued_write_ops": self.pending_writes,
+                "warm_states": len(self._warm),
+                "retained_epochs": getattr(self.store, "retained_epochs",
+                                           0)}
 
     # ---- admission ----
     def submit_update(self, src, dst, weight=None) -> bool:
@@ -159,10 +180,43 @@ class GraphQueryService:
         return t
 
     # ---- epochs ----
+    def _retain(self, ep):
+        """Refcounted epoch pin: the first reference registers the epoch
+        in the store's MVCC retention (``pin_epoch``); equal-seq captures
+        (seals with no writes between) share one pin."""
+        if ep is None:
+            return
+        slot = self._pins.get(ep.seq)
+        if slot is None:
+            self._pins[ep.seq] = [ep, 1]
+            pin = getattr(self.store, "pin_epoch", None)
+            if pin is not None:
+                pin(ep)
+        else:
+            slot[1] += 1
+
+    def _release(self, ep):
+        if ep is None:
+            return
+        slot = self._pins.get(ep.seq)
+        if slot is None:
+            return
+        slot[1] -= 1
+        if slot[1] == 0:
+            del self._pins[ep.seq]
+            rel = getattr(self.store, "release_epoch", None)
+            if rel is not None:
+                rel(slot[0])
+
     def seal_epoch(self) -> int:
         """Publish the live state as the read epoch. O(1): functional
-        states are immutable, so sealing is a capture, not a copy."""
+        states are immutable, so sealing is a capture, not a copy. The
+        per-epoch value memo resets; WARM analytics states survive the
+        seal and advance over the delta on their next query."""
+        prev = self._sealed
         self._sealed = self.store.capture()
+        self._retain(self._sealed)
+        self._release(prev)
         self._analytics_cache = {}
         self._epoch_sync_counted = False
         self.epoch += 1
@@ -200,20 +254,50 @@ class GraphQueryService:
         self._stats["inflight_write_batches"] = \
             (take + self.write_batch - 1) // self.write_batch
 
+    def _remember(self, key, res):
+        """Install ``res`` as the warm chain entry for ``key`` (LRU,
+        epoch-pinned); evictions release their pins so retention
+        plateaus at ``max_warm_states`` + the sealed epoch."""
+        old = self._warm.pop(key, None)
+        if old is not None:
+            self._release(old.handle)
+        if res.raw is None or res.handle is None:
+            return                      # nothing advanceable to keep
+        self._warm[key] = res
+        self._retain(res.handle)
+        while len(self._warm) > self.max_warm_states:
+            _, ev = self._warm.popitem(last=False)
+            self._release(ev.handle)
+            self._stats["warm_evictions"] += 1
+
     def _answer_analytics(self, q: Query):
         op = self._build_op(q)
         key = op.cache_key()
-        if key not in self._analytics_cache:
-            if not self._epoch_sync_counted:
-                # the sharded write path keeps the live state registered
-                # incrementally, so the sealed capture is reused as the
-                # analytics-ready state — no per-epoch sync recompute
-                if getattr(self.store, "sync_incremental", False):
-                    self._stats["sync_reused"] += 1
-                self._epoch_sync_counted = True
-            self._analytics_cache[key] = self.store.analytics(
-                op, at=self._sealed)
-        return self._analytics_cache[key]
+        if key in self._analytics_cache:
+            return self._analytics_cache[key]
+        if not self._epoch_sync_counted:
+            # the sharded write path keeps the live state registered
+            # incrementally, so the sealed capture is reused as the
+            # analytics-ready state — no per-epoch sync recompute
+            if getattr(self.store, "sync_incremental", False):
+                self._stats["sync_reused"] += 1
+            self._epoch_sync_counted = True
+        if self.incremental and hasattr(self.store, "analytics_advance"):
+            res = self.store.analytics_advance(op, self._warm.get(key),
+                                               self._sealed)
+        elif hasattr(self.store, "analytics_result"):
+            res = self.store.analytics_result(op, at=self._sealed)
+        else:           # minimal backend: plain value, no warm chain
+            val = self.store.analytics(op, at=self._sealed)
+            self._analytics_cache[key] = val
+            return val
+        mode = "analytics_incremental" if res.mode == "incremental" \
+            else "analytics_scratch"
+        self._stats[mode] += 1
+        if self.incremental:
+            self._remember(key, res)
+        self._analytics_cache[key] = res.value
+        return res.value
 
     def _read_phase(self):
         served = 0

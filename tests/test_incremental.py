@@ -1,0 +1,364 @@
+"""Incremental epoch-delta analytics: the advance == scratch parity
+property over random mixed streams, every forced-fallback path, and the
+service's bounded warm-state / epoch-pin retention.
+
+Streams are applied SYMMETRICALLY (each op in both directions): the
+paper treats graphs as undirected and the WCC propagation assumes it —
+on a one-way edge set its directional fixed point is not the component
+labeling, so parity against the union-find advance would be vacuous.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import AnalyticsOp, OpBatch, make_store
+
+CAPS = dict(n_max=512, pool_blocks=1024, block_size=8, dmax=256, k_max=64,
+            batch=128)
+
+
+def _store(max_delta_frac=0.9):
+    return make_store("local", key_bits=32, expected_n=64,
+                      undirected=False, m_cap=2048,
+                      max_delta_frac=max_delta_frac, **CAPS)
+
+
+def _ops(src):
+    return [AnalyticsOp("pagerank", dict(iters=200, tol=1e-7)),
+            AnalyticsOp("wcc", {}),
+            AnalyticsOp("bfs", dict(source=src)),
+            AnalyticsOp("sssp", dict(source=src)),
+            AnalyticsOp("degree_map", {}),
+            AnalyticsOp("num_edges", {})]
+
+
+def _sym(s, d, w):
+    return (np.concatenate([s, d]), np.concatenate([d, s]),
+            np.concatenate([w, w]))
+
+
+def _max_err(a, b):
+    if isinstance(a, dict):
+        if set(a) != set(b):
+            return float("inf")
+        if not a:
+            return 0.0
+        ks = sorted(a)
+        va = np.array([float(a[k]) for k in ks], np.float64)
+        vb = np.array([float(b[k]) for k in ks], np.float64)
+        return float(np.abs(va - vb).max())
+    return abs(float(a) - float(b))
+
+
+def _check_parity(name, rs, ri):
+    err = _max_err(rs.value, ri.value)
+    tol = 1e-5 if name == "pagerank" else 0.0
+    assert err <= tol, (name, ri.mode, ri.reason, err)
+
+
+def _base_load(store, rng, nv=40, n_pairs=120):
+    ids = rng.choice(2 ** 32, nv, replace=False).astype(np.uint64)
+    s = ids[rng.integers(0, nv, n_pairs)]
+    d = ids[rng.integers(0, nv, n_pairs)]
+    w = rng.uniform(1.0, 2.0, n_pairs).astype(np.float32)
+    store.apply(OpBatch.edges(*_sym(s, d, w)))
+    return ids
+
+
+# ---- the property: advance is exact on every path, fallback included ----
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_advance_matches_scratch_local(seed):
+    """Random mixed insert/update/delete streams on ``LocalStore``: every
+    epoch, every algorithm, ``analytics_advance`` equals the scratch run
+    (exactly; <1e-5 for tolerance-mode PageRank). Clean (monotone) epochs
+    must actually take the incremental path; delete epochs must drive the
+    guarded algorithms through their fallback — and still answer right."""
+    rng = np.random.default_rng(seed)
+    store = _store()
+    ids = _base_load(store, rng)
+    ops = _ops(int(ids[0]))
+    live = set()        # forward pairs known live -> deletes are effective
+
+    ep = store.capture()
+    warm = {o.name: store.analytics_result(o, ep) for o in ops}
+    for k in range(3):
+        dirty = bool(rng.random() < 0.4)
+        n = int(rng.integers(5, 25))
+        lo, hi = 0.5 * 0.5 ** k, 0.9 * 0.5 ** k   # decreasing bands:
+        s = ids[rng.integers(0, len(ids), n)]     # updates never increase
+        d = ids[rng.integers(0, len(ids), n)]
+        w = rng.uniform(lo, hi, n).astype(np.float32)
+        fresh = set(zip(s.tolist(), d.tolist()))
+        dels = set()
+        if dirty and live:
+            # only pre-batch live pairs: a pair inserted and tombstoned in
+            # the SAME batch nets to no change vs the previous epoch, so
+            # it would not put a delete in the delta
+            cand = sorted(live)
+            take = rng.integers(0, len(cand), max(1, n // 4))
+            dels = {cand[i] for i in take}
+            ds = np.array([p[0] for p in dels], np.uint64)
+            dd = np.array([p[1] for p in dels], np.uint64)
+            # tombstones append AFTER the inserts -> in-batch they win
+            s = np.concatenate([s, ds])
+            d = np.concatenate([d, dd])
+            w = np.concatenate([w, np.zeros(len(dels), np.float32)])
+        live = (live | fresh) - dels
+        dirty = bool(dels)
+        store.apply(OpBatch.edges(*_sym(s, d, w)))
+        cur = store.capture()
+        for o in ops:
+            ri = store.analytics_advance(o, warm[o.name], cur)
+            rs = store.analytics_result(o, cur)
+            _check_parity(o.name, rs, ri)
+            if not dirty:
+                assert ri.mode == "incremental", (o.name, ri.reason)
+            elif o.name in ("bfs", "wcc", "sssp"):
+                assert ri.mode == "scratch" and ri.reason, (o.name, ri)
+            warm[o.name] = ri
+
+
+# ---- every fallback reason, deterministically ----
+
+def test_fallback_reasons_local():
+    rng = np.random.default_rng(7)
+    store = _store()
+    ids = _base_load(store, rng)
+    # known-live pairs so the tombstone / update below are EFFECTIVE
+    # changes in the delta, not no-ops on absent edges
+    store.apply(OpBatch.edges(*_sym(ids[[0, 0]], ids[[1, 2]],
+                                    np.array([0.8, 0.5], np.float32))))
+    op = AnalyticsOp("bfs", dict(source=int(ids[0])))
+    ep = store.capture()
+    warm = store.analytics_result(op, ep)
+
+    # deletes -> the monotone advance refuses (but answers exactly)
+    store.apply(OpBatch.edges(*_sym(ids[:1], ids[1:2],
+                                    np.zeros(1, np.float32))))
+    cur = store.capture()
+    ri = store.analytics_advance(op, warm, cur)
+    assert (ri.mode, ri.reason) == ("scratch", "advance-refused")
+    _check_parity("bfs", store.analytics_result(op, cur), ri)
+    warm, ep = ri, cur
+
+    # a weight increase only breaks SSSP's monotonicity
+    sop = AnalyticsOp("sssp", dict(source=int(ids[0])))
+    swarm = store.analytics_result(sop, ep)
+    store.apply(OpBatch.edges(*_sym(ids[:1], ids[2:3],       # 0.5 -> 9.0
+                                    np.full(1, 9.0, np.float32))))
+    cur = store.capture()
+    ri = store.analytics_advance(sop, swarm, cur)
+    assert (ri.mode, ri.reason) == ("scratch", "advance-refused")
+    ri2 = store.analytics_advance(op, warm, cur)    # BFS shrugs it off
+    assert ri2.mode == "incremental", ri2.reason
+    warm, ep = ri2, cur
+
+    # vertex events invalidate untouched rows' in-edges -> window refusal
+    store.apply(OpBatch.delete_vertices(ids[5:6]))
+    cur = store.capture()
+    ri = store.analytics_advance(op, warm, cur)
+    assert (ri.mode, ri.reason) == ("scratch", "vertex-event")
+    warm, ep = ri, cur
+
+    # oversized delta -> refused by the frac guard
+    tight = _store(max_delta_frac=0.01)
+    tids = _base_load(tight, np.random.default_rng(8))
+    top = AnalyticsOp("num_edges", {})
+    twarm = tight.analytics_result(top, tight.capture())
+    s = tids[np.arange(30) % len(tids)]
+    d = tids[(np.arange(30) * 7 + 1) % len(tids)]
+    tight.apply(OpBatch.edges(*_sym(s, d, np.full(30, 0.3, np.float32))))
+    ri = tight.analytics_advance(top, twarm, tight.capture())
+    assert (ri.mode, ri.reason) == ("scratch", "delta-too-large")
+
+    # defrag recycles rows -> warm arrays misaligned -> window refusal.
+    # (A write must follow: defrag alone keeps the logical seq, and an
+    # equal-seq advance legitimately returns the warm result as-is.)
+    store.graph.defrag()
+    same = store.analytics_advance(op, warm, store.capture())
+    assert same is warm                 # logically unchanged epoch
+    store.apply(OpBatch.edges(*_sym(ids[:1], ids[3:4],
+                                    np.full(1, 0.2, np.float32))))
+    cur = store.capture()
+    ri = store.analytics_advance(op, warm, cur)
+    assert (ri.mode, ri.reason) == ("scratch", "defrag")
+    _check_parity("bfs", store.analytics_result(op, cur), ri)
+
+
+def test_fixed_iteration_pagerank_never_advances():
+    """Without ``tol`` the registry keeps the bit-compatible fixed-iters
+    scratch path: ranks are path-dependent, so the advance refuses."""
+    rng = np.random.default_rng(11)
+    store = _store()
+    ids = _base_load(store, rng)
+    op = AnalyticsOp("pagerank", dict(iters=20))
+    warm = store.analytics_result(op, store.capture())
+    store.apply(OpBatch.edges(*_sym(ids[:2], ids[3:5],
+                                    np.full(2, 0.4, np.float32))))
+    ri = store.analytics_advance(op, warm, store.capture())
+    assert (ri.mode, ri.reason) == ("scratch", "advance-refused")
+
+
+def test_scalar_advances_survive_deletes():
+    """degree/num_edges advance through delete epochs (no guard) and stay
+    exact — the delta records net per-pair changes."""
+    rng = np.random.default_rng(13)
+    store = _store()
+    ids = _base_load(store, rng)
+    store.apply(OpBatch.edges(*_sym(ids[:3], ids[4:7],      # known live
+                                    np.full(3, 0.7, np.float32))))
+    ops = [AnalyticsOp("degree_map", {}), AnalyticsOp("num_edges", {})]
+    ep = store.capture()
+    warm = {o.name: store.analytics_result(o, ep) for o in ops}
+    store.apply(OpBatch.edges(*_sym(ids[:3], ids[4:7],      # tombstone
+                                    np.zeros(3, np.float32))))
+    cur = store.capture()
+    for o in ops:
+        ri = store.analytics_advance(o, warm[o.name], cur)
+        assert ri.mode == "incremental", (o.name, ri.reason)
+        _check_parity(o.name, store.analytics_result(o, cur), ri)
+
+
+# ---- bounded retention: warm LRU + refcounted epoch pins ----
+
+def test_service_retention_plateaus():
+    """A long write/query stream with more distinct analytics keys than
+    ``max_warm_states``: evictions must release their epoch pins, so the
+    store's retained-version count plateaus at the cap (+ the sealed
+    epoch and the in-flight chain head) instead of growing per epoch."""
+    from repro.serve.graph_service import GraphQueryService
+    rng = np.random.default_rng(17)
+    store = _store()
+    ids = _base_load(store, rng)
+    svc = GraphQueryService(store, seal_every=1, max_warm_states=3,
+                            write_batch=64)
+    retained = []
+    for i in range(16):
+        s = ids[rng.integers(0, len(ids), 8)]
+        d = ids[rng.integers(0, len(ids), 8)]
+        w = rng.uniform(0.1, 0.9, 8).astype(np.float32)
+        svc.submit_update(*_sym(s, d, w))
+        # 6 distinct warm keys churn a 3-deep LRU every epoch
+        svc.submit_query("bfs", source=int(ids[i % 6]))
+        svc.submit_query("pagerank", tol=1e-7, iters=200)
+        svc.run()
+        retained.append(svc.stats["retained_epochs"])
+    assert svc.stats["warm_evictions"] > 0
+    assert svc.stats["analytics_incremental"] > 0
+    # plateau, not growth: the cap bounds the tail, and the count stops
+    # tracking the epoch counter entirely
+    assert max(retained[8:]) <= svc.max_warm_states + 2, retained
+    assert retained[-1] <= svc.max_warm_states + 2, retained
+
+
+def test_service_memo_identity_and_modes():
+    """Within one sealed epoch the memo returns the same object; across
+    seals the warm chain advances (mode counters prove the path)."""
+    from repro.serve.graph_service import GraphQueryService
+    rng = np.random.default_rng(19)
+    store = _store()
+    ids = _base_load(store, rng)
+    svc = GraphQueryService(store, seal_every=0, max_warm_states=4)
+    t1 = svc.submit_query("wcc")
+    svc.step()
+    t2 = svc.submit_query("wcc")
+    svc.step()
+    assert svc.results[t1] is svc.results[t2]
+    assert svc.stats["analytics_scratch"] == 1
+    svc.submit_update(*_sym(ids[:2], ids[3:5],
+                            np.full(2, 0.7, np.float32)))
+    svc.step()
+    svc.seal_epoch()
+    t3 = svc.submit_query("wcc")
+    svc.step()
+    assert svc.stats["analytics_incremental"] == 1
+    assert set(svc.results[t3]) >= set(svc.results[t1])
+
+
+# ---- cross-backend: the sharded warm programs (subprocess, 2 devices) ----
+
+@pytest.mark.slow
+def test_sharded_advance_parity_subprocess():
+    """2-shard ShardedStore: warm mesh programs (BFS/WCC/SSSP/PageRank)
+    and per-shard host advances (degree/num_edges) equal their scratch
+    runs on clean epochs, take the incremental path, and fall back with
+    the guard's reason on a delete epoch — still answering exactly."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np
+        from repro.api import AnalyticsOp, OpBatch, make_store
+
+        def sym(s, d, w):
+            return (np.concatenate([s, d]), np.concatenate([d, s]),
+                    np.concatenate([w, w]))
+
+        def err_of(a, b):
+            if isinstance(a, dict):
+                if set(a) != set(b):
+                    return float("inf")
+                ks = sorted(a)
+                return max((abs(float(a[k]) - float(b[k])) for k in ks),
+                           default=0.0)
+            return abs(float(a) - float(b))
+
+        rng = np.random.default_rng(23)
+        store = make_store("sharded", n_shards=2, n_per_shard=2048,
+                           expected_n=256, pool_blocks=4096, block_size=16,
+                           k_max=64, dmax=512, batch=128, query_batch=64,
+                           m_cap=4096, max_delta_frac=0.9)
+        ids = rng.choice(2 ** 32, 64, replace=False).astype(np.uint64)
+        s = ids[rng.integers(0, 64, 400)]
+        d = ids[rng.integers(0, 64, 400)]
+        w = rng.uniform(1.0, 2.0, 400).astype(np.float32)
+        store.apply(OpBatch.edges(*sym(s, d, w)))
+        ops = [AnalyticsOp("pagerank", dict(iters=200, tol=1e-7)),
+               AnalyticsOp("wcc", {}),
+               AnalyticsOp("bfs", dict(source=int(ids[0]))),
+               AnalyticsOp("sssp", dict(source=int(ids[0]))),
+               AnalyticsOp("degree_map", {}),
+               AnalyticsOp("num_edges", {})]
+        ep = store.capture()
+        warm = {o.name: store.analytics_result(o, ep) for o in ops}
+        for k in range(2):                      # clean monotone epochs
+            lo, hi = 0.5 * 0.5 ** k, 0.9 * 0.5 ** k
+            s = ids[rng.integers(0, 64, 20)]
+            d = ids[rng.integers(0, 64, 20)]
+            w = rng.uniform(lo, hi, 20).astype(np.float32)
+            store.apply(OpBatch.edges(*sym(s, d, w)))
+            cur = store.capture()
+            for o in ops:
+                ri = store.analytics_advance(o, warm[o.name], cur)
+                rs = store.analytics_result(o, cur)
+                assert ri.mode == "incremental", (o.name, ri.reason)
+                e = err_of(rs.value, ri.value)
+                assert e <= (1e-5 if o.name == "pagerank" else 0.0), \\
+                    (o.name, e)
+                warm[o.name] = ri
+        store.apply(OpBatch.edges(*sym(s[:4], d[:4],       # delete epoch
+                                       np.zeros(4, np.float32))))
+        cur = store.capture()
+        for o in ops:
+            ri = store.analytics_advance(o, warm[o.name], cur)
+            rs = store.analytics_result(o, cur)
+            e = err_of(rs.value, ri.value)
+            assert e <= (1e-5 if o.name == "pagerank" else 0.0), (o.name, e)
+            if o.name in ("bfs", "wcc", "sssp"):
+                assert ri.mode == "scratch" and ri.reason == "deletes", \\
+                    (o.name, ri.mode, ri.reason)
+            else:
+                assert ri.mode == "incremental", (o.name, ri.reason)
+        print("PARITY-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={**__import__("os").environ,
+                                         "PYTHONPATH": "src"},
+                         cwd=str(__import__("pathlib").Path(
+                             __file__).resolve().parents[1]), timeout=900)
+    assert "PARITY-OK" in out.stdout, out.stderr[-3000:]
