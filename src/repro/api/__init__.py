@@ -17,14 +17,15 @@ the dryrun harness and ``serve.GraphQueryService`` all drive through this
 module; the analytics registry (``repro.api.registry``) maps algorithm
 names to (shard-local phases, mesh combine loop) pairs.
 """
-from .ir import AnalyticsOp, ApplyResult, OpBatch, ReadOp
+from .ir import (AnalyticsOp, ApplyResult, OpBatch, ReadOp,
+                 UnsupportedOpError)
 from .registry import (ANALYTICS, AnalyticsSpec, analytics_spec,
                        available_analytics, register_analytics)
 from .store import (Epoch, GraphStore, LocalStore, ShardedStore,
                     available_backends, make_store, register_backend)
 
 __all__ = [
-    "AnalyticsOp", "ApplyResult", "OpBatch", "ReadOp",
+    "AnalyticsOp", "ApplyResult", "OpBatch", "ReadOp", "UnsupportedOpError",
     "ANALYTICS", "AnalyticsSpec", "analytics_spec", "available_analytics",
     "register_analytics",
     "Epoch", "GraphStore", "LocalStore", "ShardedStore",

@@ -17,9 +17,24 @@ from typing import Any, Mapping, Optional, Tuple
 import numpy as np
 
 __all__ = ["OpBatch", "ReadOp", "AnalyticsOp", "ApplyResult",
-           "AnalyticsResult"]
+           "AnalyticsResult", "UnsupportedOpError"]
 
 _OP_KINDS = ("edges", "add_vertices", "delete_vertices")
+
+
+class UnsupportedOpError(NotImplementedError):
+    """A structurally valid ``OpBatch`` the target backend cannot route.
+
+    Carries the op ``kind`` and the refusing ``backend`` so admission
+    layers (the query service) can surface a typed rejection instead of
+    crashing the write loop. Subclasses ``NotImplementedError`` so legacy
+    ``except NotImplementedError`` callers keep working."""
+
+    def __init__(self, kind: str, backend: str, detail: str = ""):
+        self.kind = kind
+        self.backend = backend
+        msg = f"op kind {kind!r} is not supported by the {backend!r} backend"
+        super().__init__(msg + (f": {detail}" if detail else ""))
 _READ_KINDS = ("lookup", "degree", "neighbors", "snapshot", "num_vertices",
                "num_edges")
 

@@ -31,6 +31,7 @@ import numpy as np
 from repro import analytics as A
 from repro.analytics import incremental as inc
 from repro.core.keys import unpack_keys
+from repro.core.status import Reason
 from repro.dist import graph_engine as ge
 
 __all__ = ["AnalyticsSpec", "ANALYTICS", "register_analytics",
@@ -140,7 +141,7 @@ register_analytics(AnalyticsSpec(
     max_iters=32:
         ge.make_bfs_warm(sspec, pspec, mesh, axis, m_cap,
                          max_iters=max_iters, frontier_budget=budget),
-    warm_guard=lambda f: "deletes" if f["has_deletes"] else None,
+    warm_guard=lambda f: Reason.DELETES if f["has_deletes"] else None,
     dyn=(("source", "id"),), absent=-1))
 
 
@@ -198,7 +199,7 @@ register_analytics(AnalyticsSpec(
     max_iters=64:
         ge.make_wcc(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
                     frontier_budget=budget, warm=True),
-    warm_guard=lambda f: "deletes" if f["has_deletes"] else None,
+    warm_guard=lambda f: Reason.DELETES if f["has_deletes"] else None,
     canonical_single=_wcc_canonical))
 
 register_analytics(AnalyticsSpec(
@@ -215,9 +216,9 @@ register_analytics(AnalyticsSpec(
     max_iters=64:
         ge.make_sssp(sspec, pspec, mesh, axis, m_cap, max_iters=max_iters,
                      frontier_budget=budget, warm=True),
-    warm_guard=lambda f: ("deletes" if f["has_deletes"] else
-                          "weight-increase" if f["has_weight_increase"]
-                          else None),
+    warm_guard=lambda f: (Reason.DELETES if f["has_deletes"] else
+                          Reason.WEIGHT_INCREASE
+                          if f["has_weight_increase"] else None),
     dyn=(("source", "id"),), absent=float(A.INF)))
 
 register_analytics(AnalyticsSpec(

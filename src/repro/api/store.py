@@ -34,9 +34,11 @@ from repro.core.keys import pack_keys, unpack_keys
 from repro.core.radixgraph import RadixGraph, interleave_undirected
 from repro.core.sort import SortSpec
 from repro.core.sort_optimizer import optimize_sort
+from repro.core.status import Reason
 from repro.dist import graph_engine as ge
 
-from .ir import AnalyticsOp, AnalyticsResult, ApplyResult, OpBatch, ReadOp
+from .ir import (AnalyticsOp, AnalyticsResult, ApplyResult, OpBatch,
+                 ReadOp, UnsupportedOpError)
 from .registry import AnalyticsSpec, analytics_spec
 
 __all__ = ["GraphStore", "Epoch", "LocalStore", "ShardedStore",
@@ -87,6 +89,16 @@ def _values_item(d: dict) -> dict:
             for k, v in d.items()}
 
 
+def _stale_gen(prev_handle: Optional[Epoch], at: Optional[Epoch],
+               gen: int) -> bool:
+    """True when either epoch handle predates the store's last
+    ``restore()`` — ``capture`` stamps handles with the restore
+    generation, so a warm chain can never silently span a restore (the
+    restored lineage may reuse seqs, defrag counters and row offsets)."""
+    return any(ep is not None and ep.cache.get("gen", 0) != gen
+               for ep in (prev_handle, at))
+
+
 class LocalStore:
     """Single-shard backend: the eager ``RadixGraph`` behind the IR.
 
@@ -97,6 +109,7 @@ class LocalStore:
     accounting)."""
 
     backend = "local"
+    supported_ops = frozenset(("edges", "add_vertices", "delete_vertices"))
 
     def __init__(self, m_cap: Optional[int] = None,
                  max_delta_frac: float = 0.1, **graph_kwargs):
@@ -105,6 +118,8 @@ class LocalStore:
         self.m_cap = m_cap or self.graph.pool_spec.capacity_entries
         self.max_delta_frac = max_delta_frac
         self._seq = 0
+        self._restore_gen = 0   # bumped by every restore(): epoch handles
+        #                         captured before it are no longer delta-safe
         self.stats = dict(ops_applied=0, ops_dropped=0, defrags=0,
                           defrag_ms=0.0, defrag_host_ms=0.0,
                           defrag_sync_ms=0.0, tiles_scanned=0,
@@ -147,11 +162,52 @@ class LocalStore:
     def capture(self) -> Epoch:
         # exempt the captured state from steady-state buffer donation
         self.graph.pin_live_state()
-        return Epoch(self.graph.state, self._seq)
+        return Epoch(self.graph.state, self._seq,
+                     cache={"gen": self._restore_gen})
 
     def clock(self, at: Optional[Epoch] = None) -> int:
         state = at.state if at is not None else self.graph.state
         return int(state.pool.clock) - 1
+
+    # ---- durability hooks (repro.storage) ----
+    def durable_state(self):
+        """The live functional state plus the HOST counters a restored
+        process needs for deterministic resume (capture seq, drop
+        accounting, the defrag watermark the spike attribution uses)."""
+        return self.graph.state, dict(
+            seq=self._seq, dropped_ops=self.graph.dropped_ops,
+            seen_defrags=self.graph._seen_defrags,
+            ops_applied=self.stats["ops_applied"],
+            ops_dropped=self.stats["ops_dropped"])
+
+    def load_durable_state(self, state, meta: dict):
+        """Install a checkpointed state as the live image. Epoch handles
+        captured BEFORE this call are lineage-divergent: ``capture`` tags
+        handles with a restore generation and ``analytics_advance``
+        refuses cross-generation windows (``Reason.RESTORE_BOUNDARY``)."""
+        g = self.graph
+        g.state = jax.tree.map(jnp.asarray, state)
+        g._invalidate()
+        g.pin_live_state()      # fresh host arrays must not be donated
+        g.dropped_ops = int(meta.get("dropped_ops", 0))
+        g._seen_defrags = int(meta.get(
+            "seen_defrags", np.asarray(g.state.pool.defrags)))
+        self._seq = int(meta.get("seq", 0))
+        self.stats["ops_applied"] = int(meta.get("ops_applied", 0))
+        self.stats["ops_dropped"] = int(meta.get("ops_dropped", 0))
+        self._restore_gen += 1
+
+    def checkpoint(self, directory, **kw):
+        """Write an epoch-consistent checkpoint of the live state (full or
+        incremental — see ``repro.storage.checkpoint``)."""
+        from repro.storage.checkpoint import save_graph_checkpoint
+        return save_graph_checkpoint(directory, self, **kw)
+
+    def restore(self, directory, ckpt_id: Optional[int] = None):
+        """Restore the live state from the latest (or given) valid
+        checkpoint chain under ``directory``."""
+        from repro.storage.checkpoint import restore_graph_checkpoint
+        return restore_graph_checkpoint(directory, self, ckpt_id)
 
     def _state(self, at: Optional[Epoch]):
         return at.state if at is not None else self.graph.state
@@ -313,28 +369,34 @@ class LocalStore:
         answer, ``mode`` just says how it was produced."""
         spec = analytics_spec(op.name)
         if at is None or prev is None:
-            return self.analytics_result(op, at, _reason="no-warm")
+            return self.analytics_result(op, at, _reason=Reason.NO_WARM)
+        if _stale_gen(prev.handle, at, self._restore_gen):
+            # a restore() replaced the lineage: equal seq / defrag
+            # counters no longer imply equal states or row identity
+            return self.analytics_result(op, at,
+                                         _reason=Reason.RESTORE_BOUNDARY)
         if prev.epoch == at.seq:
             return prev
         if (spec.advance is None or spec.result == "per_query"
                 or prev.handle is None or prev.raw is None):
-            return self.analytics_result(op, at, _reason="no-warm")
+            return self.analytics_result(op, at, _reason=Reason.NO_WARM)
         delta, reason = self._delta(prev.handle, at)
         if delta is None:
             return self.analytics_result(op, at, _reason=reason)
         if delta.n_changed > self.max_delta_frac * max(delta.m_cur, 1):
             return self.analytics_result(op, at,
-                                         _reason="delta-too-large")
+                                         _reason=Reason.DELTA_TOO_LARGE)
         snap = self._snap(at)
         params = dict(op.params)
         _dyn, rows, absent = self._resolve_dyn(spec, at.state, params)
         if absent:
-            return self.analytics_result(op, at, _reason="absent-source")
+            return self.analytics_result(op, at,
+                                         _reason=Reason.ABSENT_SOURCE)
         out = spec.advance(prev.raw, delta, self._csr(prev.handle),
                            self._csr(at), tuple(rows), params)
         if out is None:
             return self.analytics_result(op, at,
-                                         _reason="advance-refused")
+                                         _reason=Reason.ADVANCE_REFUSED)
         raw, iters = out
         if spec.result == "scalar":
             return AnalyticsResult(int(raw), at.seq, "incremental",
@@ -368,6 +430,7 @@ class ShardedStore:
     create no vertices) so any captured epoch is analytics-ready."""
 
     backend = "sharded"
+    supported_ops = frozenset(("edges",))   # vertex CRUD: LocalStore only
 
     def __init__(self, n_shards: int = 1, *, n_per_shard: int = 8192,
                  expected_n: int = 4096, key_bits: int = 32,
@@ -431,6 +494,7 @@ class ShardedStore:
         self._full_sync_cache = None   # (state-ref, synced-state) pair
         self._seen_defrags = 0
         self._pinned = None            # donation-exempt live state pytree
+        self._restore_gen = 0          # see LocalStore._restore_gen
         self.max_delta_frac = max_delta_frac
         self._retained: Dict[int, Epoch] = {}   # pinned epoch chain
         self.stats = dict(ops_applied=0, ops_dropped=0,
@@ -539,8 +603,9 @@ class ShardedStore:
                                     self.key_bits))
 
     def apply(self, batch: OpBatch) -> ApplyResult:
-        if batch.kind != "edges":
-            raise NotImplementedError(
+        if batch.kind not in self.supported_ops:
+            raise UnsupportedOpError(
+                batch.kind, self.backend,
                 "sharded vertex-only mutation batches are not routed yet: "
                 "vertices materialize from edge endpoints (plus the owner "
                 "registration sync); use LocalStore for vertex CRUD")
@@ -660,11 +725,58 @@ class ShardedStore:
         # steady-state buffer donation (the next apply's first dispatch
         # runs the non-donating program, later ones donate fresh outputs)
         self._pinned = self.state
-        return Epoch(self.state, self._seq)
+        return Epoch(self.state, self._seq,
+                     cache={"gen": self._restore_gen})
 
     def clock(self, at: Optional[Epoch] = None) -> int:
         state = at.state if at is not None else self.state
         return int(np.asarray(state.pool.clock)[0]) - 1
+
+    # ---- durability hooks (repro.storage) ----
+    def durable_state(self):
+        """Shard-stacked live state plus the host counters a restored
+        process resumes ingest with (capture seq, incremental-sync
+        watermark, defrag watermark)."""
+        return self.state, dict(
+            seq=self._seq, seen_defrags=self._seen_defrags,
+            synced_rows=np.asarray(self._synced_rows).tolist(),
+            ops_applied=self.stats["ops_applied"],
+            ops_dropped=self.stats["ops_dropped"])
+
+    def load_durable_state(self, state, meta: dict):
+        """Install a checkpointed state as the live sharded image — every
+        leaf is re-placed with the live template's sharding, so a restore
+        works on a fresh store of the same spec in a new process."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        # the leading dim of every leaf is the shard dim: place it over
+        # the mesh axis explicitly (a FRESH state's broadcast-built leaves
+        # sit on one device until the first dispatch, so copying the
+        # template's sharding would strand the restore there)
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        self._live_state = jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a), sharding), state)
+        self._pinned = self._live_state   # aliased/fresh: never donate
+        self._snap_cache = self._host_cache = self._full_sync_cache = None
+        self._synced_rows = np.asarray(
+            meta["synced_rows"], np.int32).copy() if "synced_rows" in meta \
+            else np.array(self.state.vt.num_rows)
+        self._seq = int(meta.get("seq", 0))
+        self._seen_defrags = int(meta.get("seen_defrags", np.asarray(
+            self.state.pool.defrags).sum()))
+        self.stats["ops_applied"] = int(meta.get("ops_applied", 0))
+        self.stats["ops_dropped"] = int(meta.get("ops_dropped", 0))
+        self.stats["defrags"] = self._seen_defrags
+        self._restore_gen += 1
+
+    def checkpoint(self, directory, **kw):
+        """Epoch-consistent checkpoint of the live sharded state."""
+        from repro.storage.checkpoint import save_graph_checkpoint
+        return save_graph_checkpoint(directory, self, **kw)
+
+    def restore(self, directory, ckpt_id: Optional[int] = None):
+        from repro.storage.checkpoint import restore_graph_checkpoint
+        return restore_graph_checkpoint(directory, self, ckpt_id)
 
     def _state(self, at: Optional[Epoch]):
         return at.state if at is not None else self.state
@@ -875,13 +987,16 @@ class ShardedStore:
         invariant); any refusal falls back to scratch with the reason."""
         spec = analytics_spec(op.name)
         if at is None or prev is None:
-            return self.analytics_result(op, at, _reason="no-warm")
+            return self.analytics_result(op, at, _reason=Reason.NO_WARM)
+        if _stale_gen(prev.handle, at, self._restore_gen):
+            return self.analytics_result(op, at,
+                                         _reason=Reason.RESTORE_BOUNDARY)
         if prev.epoch == at.seq:
             return prev
         if (spec.result == "per_query" or prev.handle is None
                 or prev.raw is None or not self.sync_incremental
                 or (spec.make_dist_warm is None and spec.advance is None)):
-            return self.analytics_result(op, at, _reason="no-warm")
+            return self.analytics_result(op, at, _reason=Reason.NO_WARM)
         deltas, reason = self._delta(prev.handle, at)
         if deltas is None:
             return self.analytics_result(op, at, _reason=reason)
@@ -889,7 +1004,7 @@ class ShardedStore:
         if flags["n_changed"] > self.max_delta_frac * \
                 max(flags["m_cur"], 1):
             return self.analytics_result(op, at,
-                                         _reason="delta-too-large")
+                                         _reason=Reason.DELTA_TOO_LARGE)
         if spec.warm_guard is not None:
             why = spec.warm_guard(flags)
             if why:
@@ -904,7 +1019,7 @@ class ShardedStore:
                     self.m_cap, self.frontier_budget, **params)
                 if f is None:       # e.g. fixed-iteration PageRank
                     return self.analytics_result(
-                        op, at, _reason="no-warm-program")
+                        op, at, _reason=Reason.NO_WARM_PROGRAM)
                 self._fns[key] = jax.jit(f)
             fn = self._fns[key]
             vals, it = fn(at.state, *dyn, jnp.asarray(prev.raw))
@@ -918,7 +1033,7 @@ class ShardedStore:
                                  ccsrs[s], (), params)
                 if o is None:
                     return self.analytics_result(
-                        op, at, _reason="advance-refused")
+                        op, at, _reason=Reason.ADVANCE_REFUSED)
                 r, its = o
                 raws.append(r)
                 iters = max(iters, int(its))

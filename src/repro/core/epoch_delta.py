@@ -46,6 +46,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.status import Reason
+
 __all__ = ["EpochDelta", "HostCsr", "host_csr", "extract_delta",
            "extract_delta_sharded", "merged_flags"]
 
@@ -150,25 +152,27 @@ def _row_pairs(csr: HostCsr, r: int) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def extract_delta(prev_state, cur_state, prev_csr: HostCsr,
-                  cur_csr: HostCsr) -> Tuple[Optional[EpochDelta], str]:
+                  cur_csr: HostCsr) -> Tuple[Optional[EpochDelta], Reason]:
     """Diff two captured epochs of ONE shard. Returns ``(delta, reason)``;
     ``delta is None`` means the window is not advance-safe and callers
-    must recompute from scratch (``reason`` says why)."""
+    must recompute from scratch (``reason`` says why). Reasons are
+    ``core.status.Reason`` members — ``str`` subclasses whose values are
+    the legacy reason strings, so string consumers are unaffected."""
     pf, cf = _flags(prev_state), _flags(cur_state)
     if pf[0] != cf[0]:
-        return None, "defrag"            # rows may have been recycled
+        return None, Reason.DEFRAG       # rows may have been recycled
     if pf[1:] != cf[1:]:
-        return None, "overflow"          # dropped ops in the window
+        return None, Reason.OVERFLOW     # dropped ops in the window
     pvt, cvt = _vt_host(prev_state), _vt_host(cur_state)
     n_prev, n_cur = pvt["num_rows"], cvt["num_rows"]
     if n_cur < n_prev:
-        return None, "rows-shrank"       # never expected without defrag
+        return None, Reason.ROWS_SHRANK  # never expected without defrag
     # vertex delete / revive anywhere invalidates untouched source rows
     # (their in-edges to the deleted vertex vanish at read time)
     dt_p, dt_c = pvt["del_time"][:n_prev], cvt["del_time"][:n_prev]
     moved = dt_p != dt_c
     if bool((moved & ~((dt_p == -1) & (dt_c == 0))).any()):
-        return None, "vertex-event"
+        return None, Reason.VERTEX_EVENT
 
     sig = np.zeros((cur_csr.n_cap,), bool)
     for f in ("size", "cap", "start", "deg"):
@@ -216,7 +220,7 @@ def extract_delta(prev_state, cur_state, prev_csr: HostCsr,
         touched_rows=touched, new_rows=new_rows,
         e_src=cat(es, np.int32), e_dst=cat(ed, np.int32),
         w_prev=cat(wp, np.float32), w_new=cat(wn, np.float32),
-        m_prev=prev_csr.m, m_cur=cur_csr.m), "ok"
+        m_prev=prev_csr.m, m_cur=cur_csr.m), Reason.OK
 
 
 def _host_state_views(state, n_shards: int):
@@ -257,9 +261,12 @@ def extract_delta_sharded(prev_state, cur_state, prev_csrs: List[HostCsr],
         d, reason = extract_delta(pvs[s], cvs[s], prev_csrs[s],
                                   cur_csrs[s])
         if d is None:
+            # sharded refusals carry the shard index as a prefix; the
+            # suffix stays the enum value (a plain-string composite — the
+            # shard attribution is diagnostic, the suffix is the code)
             return None, f"shard{s}:{reason}"
         out.append(d)
-    return out, "ok"
+    return out, Reason.OK
 
 
 def merged_flags(deltas: List[EpochDelta]) -> dict:

@@ -81,8 +81,14 @@ class GraphQueryService:
                  max_pending: int = 65536, bfs_iters: int = 32,
                  pr_iters: int = 20, damping: float = 0.85,
                  pipeline_depth: int = 1, incremental: bool = True,
-                 max_warm_states: int = 8):
+                 max_warm_states: int = 8, durable_ack: bool = True):
         self.store = store
+        # durable mode: when the store is WAL-backed (repro.storage.
+        # DurableStore), every write phase ends on a group-commit sync, so
+        # a write is on disk before any read of the same step can observe
+        # it — the service never acks state a crash could lose
+        self.durable_ack = durable_ack and \
+            getattr(store, "wal", None) is not None
         self.n_shards = store.n_shards
         self.write_batch = write_batch or getattr(
             store, "batch", None) or store.graph.batch
@@ -112,6 +118,7 @@ class GraphQueryService:
         self._epoch_sync_counted = False
 
         self._writes = collections.deque()  # (src, dst, w) id chunks
+        self._vertex_ops = collections.deque()  # (kind, ids) CRUD batches
         self.pending_writes = 0
         self._reads = collections.deque()
         self._next_ticket = 0
@@ -119,7 +126,9 @@ class GraphQueryService:
         self._stats = dict(steps=0, queries_answered=0, epochs_sealed=0,
                            sync_reused=0, write_flushes=0,
                            inflight_write_batches=0, analytics_scratch=0,
-                           analytics_incremental=0, warm_evictions=0)
+                           analytics_incremental=0, warm_evictions=0,
+                           vertex_ops=0, writes_rejected=0,
+                           durable_syncs=0)
 
     @property
     def stats(self) -> dict:
@@ -148,6 +157,29 @@ class GraphQueryService:
         self._writes.append((src, dst, w))
         self.pending_writes += len(src)
         return True
+
+    def _submit_vertex_op(self, kind: str, ids) -> bool:
+        """Admission for vertex CRUD: backends that cannot route the op
+        REJECT it here (``writes_rejected``) instead of crashing the
+        write loop mid-step — the ShardedStore raises a typed
+        ``UnsupportedOpError`` for vertex-only batches, and admission is
+        where that surfaces."""
+        supported = getattr(self.store, "supported_ops", None)
+        if supported is not None and kind not in supported:
+            self._stats["writes_rejected"] += 1
+            return False
+        self._vertex_ops.append((kind, np.asarray(ids, np.uint64)))
+        return True
+
+    def submit_add_vertices(self, ids) -> bool:
+        """Enqueue a vertex-create batch. False = rejected (unsupported
+        backend). Vertex batches flush at the START of the next write
+        phase, before that phase's edge coalescing."""
+        return self._submit_vertex_op("add_vertices", ids)
+
+    def submit_delete_vertices(self, ids) -> bool:
+        """Enqueue a vertex-delete batch (see ``submit_add_vertices``)."""
+        return self._submit_vertex_op("delete_vertices", ids)
 
     def _build_op(self, q: Query) -> AnalyticsOp:
         params = dict(q.params or {})
@@ -231,7 +263,18 @@ class GraphQueryService:
 
     # ---- scheduling ----
     def _write_phase(self):
+        wrote = False
+        while self._vertex_ops:
+            kind, ids = self._vertex_ops.popleft()
+            try:
+                self.store.apply(OpBatch(kind=kind, ids=ids))
+                self._stats["vertex_ops"] += 1
+                wrote = True
+            except NotImplementedError:      # raced past admission
+                self._stats["writes_rejected"] += 1
         if not self._writes:
+            if wrote:
+                self._durable_sync()
             return
         B = self.write_batch * self.pipeline_depth
         parts, need = [], B
@@ -253,6 +296,15 @@ class GraphQueryService:
         self._stats["write_flushes"] += 1
         self._stats["inflight_write_batches"] = \
             (take + self.write_batch - 1) // self.write_batch
+        self._durable_sync()
+
+    def _durable_sync(self):
+        """End-of-write-phase group-commit boundary in durable mode: the
+        WAL records of this phase's applies are fsynced before any read
+        (or caller ack) can observe their effects."""
+        if self.durable_ack:
+            self.store.sync()
+            self._stats["durable_syncs"] += 1
 
     def _remember(self, key, res):
         """Install ``res`` as the warm chain entry for ``key`` (LRU,
@@ -338,10 +390,11 @@ class GraphQueryService:
         """Drive scheduling rounds until both queues drain (raises if
         ``max_steps`` is exhausted first — results are never silently
         partial), then seal so queries admitted next observe every write."""
-        while (self._writes or self._reads) and max_steps > 0:
+        while (self._writes or self._vertex_ops or self._reads) \
+                and max_steps > 0:
             self.step()
             max_steps -= 1
-        if self._writes or self._reads:
+        if self._writes or self._vertex_ops or self._reads:
             raise RuntimeError(
                 f"run(): queues not drained ({self.pending_writes} write "
                 f"ops, {len(self._reads)} reads still pending)")
